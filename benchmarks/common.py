@@ -1,0 +1,49 @@
+"""Shared benchmark setup: CPU-scale synthetic twins of the paper's Table 2
+datasets (aspect/density preserved; see repro/configs/glm.py)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+
+from repro.configs.base import GLMConfig
+from repro.data.synthetic import GLMDataset, make_glm_dataset
+
+# CPU-scale twins (paper scale is exercised via the dry-run, not here)
+TWINS = {
+    "epsilon-twin": GLMConfig(
+        name="epsilon-twin", citation="Table 2: epsilon (dense)",
+        num_examples=6400, num_features=512, density=1.0, avg_nnz_per_example=512),
+    "webspam-twin": GLMConfig(
+        name="webspam-twin", citation="Table 2: webspam (sparse, wide)",
+        num_examples=5120, num_features=4096, density=0.02,
+        avg_nnz_per_example=82),
+    "dna-twin": GLMConfig(
+        name="dna-twin", citation="Table 2: dna (many examples, narrow)",
+        num_examples=25600, num_features=128, density=0.25,
+        avg_nnz_per_example=32),
+}
+
+
+def load_twin(name: str) -> GLMDataset:
+    import zlib
+
+    # deterministic across processes (hash() is salted per-interpreter)
+    return make_glm_dataset(TWINS[name], jax.random.key(zlib.crc32(name.encode())))
+
+
+@dataclass
+class Timer:
+    t0: float = 0.0
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

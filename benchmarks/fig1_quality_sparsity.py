@@ -1,0 +1,65 @@
+"""Figure 1: testing quality (AUPRC) vs #nonzeros — d-GLMNET regularization
+path vs distributed online learning via truncated gradient (best over a VW-
+style parameter sweep, evaluating every pass snapshot, as in paper §4.3)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import TWINS, Timer, emit, load_twin
+from repro.core import DGLMNETOptions, TGOptions, lambda_max, regularization_path
+from repro.core.truncated_gradient import truncated_gradient_fit
+from repro.train.metrics import auprc, glm_eval_fn
+
+PATH_LEN = 10
+TG_LRS = (0.1, 0.3, 0.5)
+TG_PASSES = 8
+
+
+def run(verbose: bool = True):
+    rows = []
+    for name in TWINS:
+        ds = load_twin(name)
+        X, y = ds.X_train, ds.y_train
+        eval_fn = glm_eval_fn(ds.X_test, ds.y_test)
+
+        with Timer() as t_d:
+            pts = regularization_path(
+                X, y, path_len=PATH_LEN,
+                opts=DGLMNETOptions(num_blocks=16, tile=64, max_iters=50),
+                eval_fn=eval_fn)
+        for p in pts:
+            rows.append((name, "d-glmnet", f"{p.lam:.4g}", p.nnz,
+                         p.metrics["auprc"]))
+
+        with Timer() as t_tg:
+            lmax = float(lambda_max(X, y))
+            for lam_div in (16, 64, 256):
+                for lr in TG_LRS:
+                    snaps = truncated_gradient_fit(
+                        X, y, lmax / lam_div,
+                        opts=TGOptions(num_machines=16, passes=TG_PASSES,
+                                       learning_rate=lr),
+                        key=jax.random.key(0))
+                    for pass_idx, beta in snaps:
+                        import jax.numpy as jnp
+
+                        nnz = int((jnp.abs(beta) > 1e-8).sum())
+                        rows.append((name, f"tg(lr={lr})",
+                                     f"{lmax/lam_div:.4g}@p{pass_idx}", nnz,
+                                     auprc(ds.X_test @ beta, ds.y_test)))
+
+        best_d = max(r[4] for r in rows if r[0] == name and r[1] == "d-glmnet")
+        best_t = max(r[4] for r in rows if r[0] == name and r[1].startswith("tg"))
+        emit(f"fig1.{name}.dglmnet_path", t_d.dt * 1e6 / PATH_LEN,
+             f"best_auprc={best_d:.4f}")
+        emit(f"fig1.{name}.tg_sweep", t_tg.dt * 1e6 / (9 * TG_PASSES),
+             f"best_auprc={best_t:.4f};dglmnet_wins={best_d >= best_t - 0.02}")
+        if verbose:
+            print(f"# {name}: d-GLMNET best AUPRC {best_d:.4f} "
+                  f"vs TG best {best_t:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(c) for c in r))

@@ -1,0 +1,44 @@
+"""Kernel micro-benchmarks (interpret-mode on CPU: correctness-surface
+timing only; TPU wall-times come from the roofline analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.subproblem import cd_cycle_gram_tile
+from repro.kernels.ref import logistic_stats_ref
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    key = jax.random.key(0)
+    for f in (128, 256, 512):
+        A = jax.random.normal(key, (2 * f, f))
+        G = A.T @ A / f
+        c = jax.random.normal(key, (f,))
+        beta = jnp.zeros(f)
+        jitted = jax.jit(lambda G, c, b: cd_cycle_gram_tile(G, c, b, b * 0, 0.1, 1e-6))
+        dt = _time(jitted, G, c, beta)
+        emit(f"kernel.gram_cd_oracle.F{f}", dt * 1e6, f"flops~{2*f*f}")
+    for n in (65536, 262144):
+        m = jax.random.normal(key, (n,))
+        y = jnp.sign(jax.random.normal(key, (n,)))
+        jitted = jax.jit(lambda m, y: logistic_stats_ref(m, y))
+        dt = _time(jitted, m, y)
+        emit(f"kernel.logistic_stats_ref.n{n}", dt * 1e6, f"bytes~{n*16}")
+
+
+if __name__ == "__main__":
+    run()

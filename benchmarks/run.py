@@ -1,0 +1,35 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (plus commented context lines).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1|table2|table3|kernels]
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["fig1", "table2", "table3", "kernels", "ablation"])
+    args = ap.parse_args()
+
+    from benchmarks import fig1_quality_sparsity, kernels_bench, table2_datasets, table3_timing
+
+    print("name,us_per_call,derived")
+    if args.only in (None, "table2"):
+        table2_datasets.run()
+    if args.only in (None, "table3"):
+        table3_timing.run()
+    if args.only in (None, "fig1"):
+        fig1_quality_sparsity.run()
+    if args.only in (None, "kernels"):
+        kernels_bench.run()
+    if args.only == "ablation":   # opt-in: ~8 min
+        from benchmarks import ablation_parallel_cd
+
+        ablation_parallel_cd.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Table 2: dataset summary (synthetic twins; paper-scale dims are in
+repro/configs/glm.py and exercised via the dry-run)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import TWINS, Timer, emit, load_twin
+from repro.configs.glm import GLM_CONFIGS
+
+
+def run():
+    rows = []
+    print("# dataset,examples(train/test),features,nnz,avg_nnz/example")
+    for name in TWINS:
+        with Timer() as t:
+            ds = load_twin(name)
+            X = np.asarray(ds.X_train)
+            nnz = int((X != 0).sum()) + int((np.asarray(ds.X_test) != 0).sum())
+            avg = nnz / (ds.X_train.shape[0] + ds.X_test.shape[0])
+        rows.append((name, f"{ds.X_train.shape[0]}/{ds.X_test.shape[0]}",
+                     X.shape[1], nnz, f"{avg:.1f}"))
+        print("# " + ",".join(str(c) for c in rows[-1]))
+        emit(f"table2.{name}.gen", t.dt * 1e6, f"nnz={nnz}")
+    print("# paper-scale (dry-run) configs:")
+    for c in GLM_CONFIGS.values():
+        print(f"# {c.name}: n={c.num_examples} p={c.num_features} "
+              f"avg_nnz={c.avg_nnz_per_example}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Table 3: execution times — iterations to convergence, avg time/iteration,
+line-search share; truncated-gradient avg time per pass for comparison
+(one iteration of both = one full pass over the data, paper §4.4)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import TWINS, Timer, emit, load_twin
+from repro.core import DGLMNETOptions, TGOptions, lambda_max
+from repro.core.dglmnet import fit
+from repro.core.linesearch import line_search
+from repro.core.truncated_gradient import truncated_gradient_fit
+
+
+def run():
+    rows = []
+    print("# dataset,iters,time_per_iter_us,linesearch_share,tg_time_per_pass_us")
+    for name in TWINS:
+        ds = load_twin(name)
+        X, y = ds.X_train, ds.y_train
+        lam = float(lambda_max(X, y)) / 64
+        opts = DGLMNETOptions(num_blocks=16, tile=64, max_iters=40)
+
+        # warmup (compile)
+        fit(X, y, lam, opts=DGLMNETOptions(num_blocks=16, tile=64, max_iters=2))
+
+        with Timer() as t_fit:
+            res = fit(X, y, lam, opts=opts)
+        t_iter = t_fit.dt / max(res.n_iters, 1)
+
+        # line-search share: time the jitted line search alone
+        from repro.core.dglmnet import dglmnet_iteration
+        from repro.core.objective import margins
+
+        beta0 = res.beta * 0
+        m0 = margins(X, beta0)
+        dbeta, dm, gd = dglmnet_iteration(X, y, beta0, m0, lam, opts)
+        jax.block_until_ready(dm)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            r = line_search(m0, dm, y, beta0, dbeta, lam, gd)
+        jax.block_until_ready(r.alpha)
+        t_ls = (time.perf_counter() - t0) / 5
+        share = min(t_ls / max(t_iter, 1e-9), 1.0)
+
+        truncated_gradient_fit(X, y, lam, opts=TGOptions(num_machines=16, passes=1))
+        with Timer() as t_tg:
+            truncated_gradient_fit(
+                X, y, lam, opts=TGOptions(num_machines=16, passes=4))
+        t_pass = t_tg.dt / 4
+
+        rows.append((name, res.n_iters, t_iter * 1e6, share, t_pass * 1e6))
+        print(f"# {name},{res.n_iters},{t_iter*1e6:.0f},{share:.2%},{t_pass*1e6:.0f}")
+        emit(f"table3.{name}.dglmnet_iter", t_iter * 1e6,
+             f"iters={res.n_iters};ls_share={share:.3f}")
+        emit(f"table3.{name}.tg_pass", t_pass * 1e6, "")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,132 @@
+"""Perf hillclimb on the paper's own workload: one distributed d-GLMNET
+outer iteration at Table-2 scale (glm-dna: n=45M, and glm-epsilon).
+
+Variants lower + compile on 256 fake devices; roofline terms from the
+compiled artifact (tile loop unrolled for exact HloCostAnalysis). Results
+append to results/hillclimb_glm.json; narrative goes to EXPERIMENTS §Perf.
+
+    PYTHONPATH=src python scripts/hillclimb_glm.py [--variant NAME]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.dglmnet import DGLMNETOptions  # noqa: E402
+from repro.core.distributed import make_dglmnet_step  # noqa: E402
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16  # noqa: E402
+from repro.launch.roofline import analyze  # noqa: E402
+from repro.sharding.ctx import unroll_context  # noqa: E402
+
+N_DNA = 45_000_000
+P_DNA = 800
+N_EPS = 400_000
+P_EPS = 2000
+
+
+def mesh_of(data, model):
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def lower_variant(*, name, n, p, mesh, tile, dtype=jnp.float32, unroll=True,
+                  verbose=True):
+    mdim = mesh.shape["model"]
+    ddim = mesh.shape["data"]
+    n -= n % ddim
+    p_pad = ((p + mdim * tile - 1) // (mdim * tile)) * (mdim * tile)
+    opts = DGLMNETOptions(tile=tile, method="gram")
+    step = make_dglmnet_step(mesh, opts)
+    sds = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)
+    args = (sds((n, p_pad), dtype), sds((n,), jnp.float32),
+            sds((p_pad,), jnp.float32), sds((n,), jnp.float32),
+            sds((), jnp.float32))
+    t0 = time.time()
+    with unroll_context(unroll):
+        compiled = jax.jit(step).lower(*args).compile()
+    dt_c = time.time() - t0
+    chips = ddim * mdim
+    # useful flops for one outer iteration (Gram form, unpadded p):
+    # G tiles n*tile*p + c/r updates ~ 2*n*p  => ~ n*p*(tile+4) MACs
+    mf = 2.0 * n * p * (tile + 4)
+    roof = analyze(compiled, arch=name, shape="dglmnet_step",
+                   mesh_name=f"{ddim}x{mdim}", chips=chips, model_flops=mf)
+    mem = compiled.memory_analysis()
+    out = roof.to_dict()
+    out.update(compile_s=dt_c, temp_bytes=int(mem.temp_size_in_bytes),
+               arg_bytes=int(mem.argument_size_in_bytes), tile=tile,
+               dtype=str(dtype.__name__ if hasattr(dtype, '__name__') else dtype),
+               n=n, p=p, p_pad=p_pad)
+    if verbose:
+        print(f"{name:32s} t_comp={roof.t_compute*1e3:8.2f}ms "
+              f"t_mem={roof.t_memory*1e3:8.2f}ms "
+              f"t_coll={roof.t_collective*1e3:8.2f}ms "
+              f"bottleneck={roof.bottleneck:10s} "
+              f"temp={mem.temp_size_in_bytes/1e9:6.2f}GB "
+              f"args={mem.argument_size_in_bytes/1e9:6.2f}GB "
+              f"(compile {dt_c:.0f}s)")
+    return out
+
+
+VARIANTS = {
+    # paper-faithful: features-only split (each machine holds all examples)
+    "dna.paper-1d-m256.t128": lambda: lower_variant(
+        name="dna.paper-1d-m256.t128", n=N_DNA, p=P_DNA,
+        mesh=mesh_of(1, 256), tile=128),
+    # beyond-paper 2-D: examples x features
+    "dna.2d-16x16.t128": lambda: lower_variant(
+        name="dna.2d-16x16.t128", n=N_DNA, p=P_DNA,
+        mesh=mesh_of(16, 16), tile=128),
+    # tile-size sweep on the 2-D layout
+    "dna.2d-16x16.t64": lambda: lower_variant(
+        name="dna.2d-16x16.t64", n=N_DNA, p=P_DNA,
+        mesh=mesh_of(16, 16), tile=64),
+    "dna.2d-16x16.t256": lambda: lower_variant(
+        name="dna.2d-16x16.t256", n=N_DNA, p=P_DNA,
+        mesh=mesh_of(16, 16), tile=256),
+    # bf16 design-matrix storage (Gram math still f32 via upcast)
+    "dna.2d-16x16.t64.bf16X": lambda: lower_variant(
+        name="dna.2d-16x16.t64.bf16X", n=N_DNA, p=P_DNA,
+        mesh=mesh_of(16, 16), tile=64, dtype=jnp.bfloat16),
+    # wider data axis (examples dominate dna): 64 x 4
+    "dna.2d-64x4.t64": lambda: lower_variant(
+        name="dna.2d-64x4.t64", n=N_DNA, p=P_DNA,
+        mesh=mesh_of(64, 4), tile=64),
+    "eps.paper-1d-m256.t128": lambda: lower_variant(
+        name="eps.paper-1d-m256.t128", n=N_EPS, p=P_EPS,
+        mesh=mesh_of(1, 256), tile=128),
+    "eps.2d-16x16.t128": lambda: lower_variant(
+        name="eps.2d-16x16.t128", n=N_EPS, p=P_EPS,
+        mesh=mesh_of(16, 16), tile=128),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default=None, choices=list(VARIANTS))
+    ap.add_argument("--out", default="results/hillclimb_glm.json")
+    args = ap.parse_args()
+    names = [args.variant] if args.variant else list(VARIANTS)
+    results = []
+    for nm in names:
+        try:
+            results.append(VARIANTS[nm]())
+        except Exception as e:  # noqa: BLE001
+            import traceback
+
+            traceback.print_exc()
+            results.append({"arch": nm, "status": "error", "error": repr(e)})
+    prev = []
+    if os.path.exists(args.out):
+        prev = json.load(open(args.out))
+    json.dump(prev + results, open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

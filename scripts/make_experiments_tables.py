@@ -1,0 +1,80 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def load(pattern):
+    rows = []
+    for f in sorted(glob.glob(pattern)):
+        rows.extend(json.load(open(f)))
+    return rows
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def temp_bytes(r):
+    import re
+
+    m = re.search(r"temp_size_in_bytes=(\d+)", r.get("memory_analysis", ""))
+    return int(m.group(1)) if m else None
+
+
+def roofline_table(rows):
+    print("| arch | shape | chips | t_comp | t_mem | t_coll | bottleneck | "
+          "model/HLO flops | temp/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] == "skip":
+            print(f"| {r['arch']} | {r['shape']} | - | - | - | - | SKIP | - | "
+                  f"{r['reason'][:60]}... |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | - | - | - | - | ERROR | - | - |")
+            continue
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} "
+            f"| {r['t_compute']*1e3:.1f}ms | {r['t_memory']*1e3:.1f}ms "
+            f"| {r['t_collective']*1e3:.1f}ms | **{r['bottleneck']}** "
+            f"| {r.get('useful_flops_ratio', 0):.3f} "
+            f"| {fmt_bytes(temp_bytes(r))} |"
+        )
+
+
+def dryrun_table(rows):
+    print("| arch | shape | mesh | status | compile | args/dev | temp/dev |")
+    print("|---|---|---|---|---|---|---|")
+    import re
+
+    for r in rows:
+        if r["status"] == "skip":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | skip | - | - | - |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | - | - | - |")
+            continue
+        m = re.search(r"argument_size_in_bytes=(\d+)", r.get("memory_analysis", ""))
+        args_b = int(m.group(1)) if m else None
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+              f"| {r.get('compile_s', 0):.0f}s | {fmt_bytes(args_b)} "
+              f"| {fmt_bytes(temp_bytes(r))} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    pattern = sys.argv[2] if len(sys.argv) > 2 else "results/single_*.json"
+    rows = load(pattern)
+    if which == "roofline":
+        roofline_table(rows)
+    else:
+        dryrun_table(rows)

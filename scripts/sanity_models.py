@@ -1,0 +1,38 @@
+"""Quick dev sanity: one forward/prefill/decode per smoke arch."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import MODEL_CONFIGS
+from repro.models import forward, init_cache, init_params
+
+only = sys.argv[1:] or list(MODEL_CONFIGS)
+
+for name in only:
+    cfg = MODEL_CONFIGS[name].smoke()
+    key = jax.random.key(0)
+    params = init_params(key, cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    b, s = 2, 64
+    inputs = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.frontend.kind != "none" and not cfg.encdec.enabled:
+        inputs["patch_embeds" if cfg.frontend.kind == "vision_patches" else "frame_embeds"] = (
+            jnp.ones((b, cfg.frontend.tokens_per_item, cfg.frontend.embed_dim), jnp.float32)
+        )
+    if cfg.encdec.enabled:
+        inputs["frame_embeds"] = jnp.ones((b, 32, cfg.frontend.embed_dim), jnp.float32)
+
+    logits, _, aux = forward(params, inputs, cfg, mode="train")
+    assert not bool(jnp.isnan(logits).any()), f"{name}: NaN logits"
+
+    # decode one token against a small cache
+    cache = init_cache(cfg, b, 128)
+    tok = inputs["tokens"][:, :1]
+    dec_in = {"tokens": tok}
+    logits_d, new_cache, _ = forward(
+        params, dec_in, cfg, mode="decode", cache=cache,
+        cache_index=jnp.asarray(5, jnp.int32),
+    )
+    assert not bool(jnp.isnan(logits_d).any()), f"{name}: NaN decode"
+    print(f"OK {name:26s} params={n:,} logits={logits.shape} decode={logits_d.shape} aux={sorted(aux)}")

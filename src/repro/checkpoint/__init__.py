@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpointer import load_pytree, save_pytree  # noqa: F401

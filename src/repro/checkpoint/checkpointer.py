@@ -1,0 +1,73 @@
+"""Dependency-free pytree checkpointer (no orbax in this environment).
+
+Layout: <dir>/manifest.json  (treedef + leaf paths + dtypes/shapes)
+        <dir>/arrays.npz     (leaf arrays keyed by sanitized path)
+
+Restore is sharding-aware: pass ``shardings`` (a matching pytree of
+NamedSharding / PartitionSpec under a mesh context) to place leaves as they
+load — sufficient for single-host multi-device; a multi-host variant would
+stream per-shard files, noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _keys(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [jax.tree_util.keystr(p) for p, _ in flat]
+    return flat, treedef, names
+
+
+def save_pytree(tree: Any, directory: str, *, step: Optional[int] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, _, names = _keys(tree)
+    arrays = {}
+    manifest = {"leaves": [], "step": step}
+    for name, (_, leaf) in zip(names, flat):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_name = str(arr.dtype)
+        if dtype_name == "bfloat16":  # npz cannot serialize ml_dtypes
+            arr = arr.astype(np.float32)
+        key = f"leaf_{len(arrays)}"
+        arrays[key] = arr
+        manifest["leaves"].append(
+            {"path": name, "key": key, "dtype": dtype_name, "shape": list(arr.shape)}
+        )
+    np.savez(os.path.join(directory, "arrays.npz"), **arrays)
+    with open(os.path.join(directory, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return directory
+
+
+def load_pytree(directory: str, like: Any, *, shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (paths must match)."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(directory, "arrays.npz"))
+    by_path = {e["path"]: data[e["key"]] for e in manifest["leaves"]}
+
+    flat, treedef, names = _keys(like)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: x is None or hasattr(x, "spec") or hasattr(x, "_partitions")
+        )[0]
+    leaves = []
+    for i, (name, (_, leaf)) in enumerate(zip(names, flat)):
+        if name not in by_path:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        arr = by_path[name]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {name}: {arr.shape} vs {leaf.shape}")
+        out = jnp.asarray(arr, dtype=leaf.dtype)
+        if shard_flat is not None and shard_flat[i] is not None:
+            out = jax.device_put(out, shard_flat[i])
+        leaves.append(out)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,62 @@
+"""Config registry: ``get_config("<arch-id>")`` for every assigned arch.
+
+Arch ids match the assignment table verbatim (dashes/dots); module names are
+the pythonized versions.
+"""
+from __future__ import annotations
+
+from repro.configs.base import (  # noqa: F401
+    ARCH_TYPES,
+    AttentionConfig,
+    EncDecConfig,
+    FrontendStub,
+    GLMConfig,
+    HybridConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+)
+from repro.configs.shapes import SHAPES, InputShape, get_shape  # noqa: F401
+
+from repro.configs.qwen2_5_3b import CONFIG as _qwen2_5_3b
+from repro.configs.mamba2_2p7b import CONFIG as _mamba2_2p7b
+from repro.configs.zamba2_7b import CONFIG as _zamba2_7b
+from repro.configs.qwen1_5_4b import CONFIG as _qwen1_5_4b
+from repro.configs.internlm2_1p8b import CONFIG as _internlm2_1p8b
+from repro.configs.tinyllama_1p1b import CONFIG as _tinyllama_1p1b
+from repro.configs.deepseek_v3_671b import CONFIG as _deepseek_v3_671b
+from repro.configs.qwen2_vl_72b import CONFIG as _qwen2_vl_72b
+from repro.configs.llama4_scout_17b_a16e import CONFIG as _llama4_scout
+from repro.configs.seamless_m4t_medium import CONFIG as _seamless_m4t
+from repro.configs.glm import GLM_CONFIGS
+
+MODEL_CONFIGS = {
+    c.name: c
+    for c in (
+        _qwen2_5_3b,
+        _mamba2_2p7b,
+        _zamba2_7b,
+        _qwen1_5_4b,
+        _internlm2_1p8b,
+        _tinyllama_1p1b,
+        _deepseek_v3_671b,
+        _qwen2_vl_72b,
+        _llama4_scout,
+        _seamless_m4t,
+    )
+}
+
+ALL_CONFIGS = {**MODEL_CONFIGS, **GLM_CONFIGS}
+
+ARCH_IDS = tuple(MODEL_CONFIGS)
+GLM_IDS = tuple(GLM_CONFIGS)
+
+
+def get_config(name: str):
+    """Look up any registered config (model arch or GLM workload)."""
+    try:
+        return ALL_CONFIGS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; have {sorted(ALL_CONFIGS)}"
+        ) from None

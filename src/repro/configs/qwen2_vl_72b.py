@@ -1,0 +1,36 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191].
+
+Vision frontend is a STUB per the assignment carve-out: input_specs()
+provides precomputed patch embeddings (ViT output, 1280-dim) and the
+framework owns only the projector + language decoder.
+"""
+from repro.configs.base import AttentionConfig, FrontendStub, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    arch_type="vlm",
+    citation="arXiv:2409.12191 (Qwen2-VL)",
+    num_layers=80,
+    d_model=8192,
+    d_ff=29568,
+    vocab_size=152064,
+    attention=AttentionConfig(
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        use_mrope=True,
+        mrope_sections=(16, 24, 24),   # (temporal, height, width) rotary sections
+    ),
+    frontend=FrontendStub(
+        kind="vision_patches",
+        tokens_per_item=1024,          # dynamic-resolution: nominal patch budget
+        embed_dim=1280,                # ViT output dim; projector -> d_model
+    ),
+    norm="rmsnorm",
+    act="silu",
+    microbatch=8,
+    optimizer="adafactor",
+    long_context_mode="sliding_window",
+)

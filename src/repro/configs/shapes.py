@@ -1,0 +1,32 @@
+"""Assigned input shapes (public pool). See DESIGN.md §2.5 for semantics.
+
+train_*   -> lowers train_step (full forward+backward+update)
+prefill_* -> lowers a forward that builds the KV cache / SSM state
+decode_*  -> lowers serve_step: ONE new token against a cache of seq_len
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def get_shape(name: str) -> InputShape:
+    try:
+        return SHAPES[name]
+    except KeyError:
+        raise KeyError(f"unknown input shape {name!r}; have {sorted(SHAPES)}") from None

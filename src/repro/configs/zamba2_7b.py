@@ -1,0 +1,33 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242]."""
+from repro.configs.base import AttentionConfig, HybridConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    arch_type="hybrid",
+    citation="arXiv:2411.15242 (Zamba2)",
+    num_layers=81,
+    d_model=3584,
+    d_ff=14336,                  # shared transformer block MLP
+    vocab_size=32000,
+    attention=AttentionConfig(
+        num_heads=32,
+        num_kv_heads=32,         # shared block is full MHA
+        head_dim=112,            # 3584 / 32
+        rope_theta=10000.0,
+    ),
+    ssm=SSMConfig(
+        d_state=64,
+        head_dim=64,             # d_inner = 7168 -> 112 SSD heads
+        expand=2,
+        conv_width=4,
+        chunk_size=256,
+    ),
+    hybrid=HybridConfig(attn_every=6, shared_attn=True),
+    norm="rmsnorm",
+    tie_embeddings=True,
+    microbatch=4,
+    optimizer="adamw",
+    long_context_mode="native",  # SSM spine; shared-attn blocks go sliding-window
+    long_context_window=8192,
+)

@@ -1,0 +1,19 @@
+from repro.core.dglmnet import DGLMNETOptions, FitResult, dglmnet_iteration, fit  # noqa: F401
+from repro.core.distributed import fit_distributed, make_dglmnet_step  # noqa: F401
+from repro.core.linesearch import LineSearchResult, line_search  # noqa: F401
+from repro.core.objective import (  # noqa: F401
+    lambda_max,
+    margins,
+    neg_log_likelihood,
+    objective,
+    soft_threshold,
+    working_stats,
+)
+from repro.core.regpath import PathPoint, regularization_path  # noqa: F401
+from repro.core.subproblem import (  # noqa: F401
+    cd_cycle_gram,
+    cd_cycle_gram_tile,
+    cd_cycle_residual,
+    solve_subproblem,
+)
+from repro.core.truncated_gradient import TGOptions, truncated_gradient_fit  # noqa: F401

@@ -1,0 +1,117 @@
+"""Line search (paper Algorithm 3).
+
+All evaluations are O(n + p) from the cached margins m = X@beta and the
+all-reduced dm = X@dbeta — never a pass over X:
+
+    f(beta + a*dbeta) = sum_i softplus(-y (m + a dm)) + lam ||beta + a dbeta||_1
+
+Steps:
+ 1. If a = 1 already satisfies the Armijo sufficient-decrease test, take it
+    (sparsity safeguard: dbeta_j = -beta_j zeros survive).
+ 2. a_init = argmin_{delta<=a<=1} f(beta + a dbeta)  (golden-section).
+ 3. Armijo backtracking from a_init:  f(a) <= f(0) + a*sigma*D with
+    D = grad(L)^T dbeta + gamma dbeta^T H dbeta + lam(||beta+dbeta||_1 - ||beta||_1).
+Paper constants: b = 0.5, sigma = 0.01, gamma = 0.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objective import l1_norm, neg_log_likelihood
+
+GOLD = 0.6180339887498949
+
+
+class LineSearchResult(NamedTuple):
+    alpha: jnp.ndarray
+    f_new: jnp.ndarray
+    took_unit_step: jnp.ndarray       # bool: step-1 short-circuit hit
+    backtracks: jnp.ndarray
+
+
+def f_alpha(alpha, m, dm, y, beta, dbeta, lam):
+    return neg_log_likelihood(m + alpha * dm, y) + lam * l1_norm(beta + alpha * dbeta)
+
+
+def armijo_D(grad_dot_dbeta, quad_term, beta, dbeta, lam, gamma=0.0):
+    """D = grad(L)^T dbeta + gamma*dbeta^T H dbeta + lam(|beta+dbeta| - |beta|)."""
+    return (
+        grad_dot_dbeta
+        + gamma * quad_term
+        + lam * (l1_norm(beta + dbeta) - l1_norm(beta))
+    )
+
+
+def golden_section(fun, lo, hi, iters: int = 24):
+    """Minimize a unimodal scalar function on [lo, hi] (fixed iterations)."""
+
+    def body(_, state):
+        a, b, c, d, fc, fd = state
+        shrink = fc < fd
+        b_new = jnp.where(shrink, d, b)
+        a_new = jnp.where(shrink, a, c)
+        c_new = b_new - GOLD * (b_new - a_new)
+        d_new = a_new + GOLD * (b_new - a_new)
+        fc_new = fun(c_new)
+        fd_new = fun(d_new)
+        return a_new, b_new, c_new, d_new, fc_new, fd_new
+
+    c0 = hi - GOLD * (hi - lo)
+    d0 = lo + GOLD * (hi - lo)
+    state = (lo, hi, c0, d0, fun(c0), fun(d0))
+    a, b, *_ = jax.lax.fori_loop(0, iters, body, state)
+    return 0.5 * (a + b)
+
+
+@partial(jax.jit, static_argnames=("max_backtracks", "b", "sigma", "gamma", "delta"))
+def line_search(
+    m,                 # (n,) margins X@beta
+    dm,                # (n,) X@dbeta (all-reduced across feature blocks)
+    y,                 # (n,)
+    beta,              # (p,)
+    dbeta,             # (p,)
+    lam,
+    grad_dot_dbeta,    # scalar: grad L(beta)^T dbeta
+    quad_term=0.0,     # scalar: dbeta^T H~ dbeta (gamma=0 -> unused)
+    *,
+    max_backtracks: int = 30,
+    b: float = 0.5,
+    sigma: float = 0.01,
+    gamma: float = 0.0,
+    delta: float = 1e-3,
+) -> LineSearchResult:
+    f0 = f_alpha(0.0, m, dm, y, beta, dbeta, lam)
+    D = armijo_D(grad_dot_dbeta, quad_term, beta, dbeta, lam, gamma)
+    f1 = f_alpha(1.0, m, dm, y, beta, dbeta, lam)
+
+    # Step 1: unit step if it already gives sufficient decrease
+    unit_ok = f1 <= f0 + sigma * D
+
+    def take_unit(_):
+        return LineSearchResult(jnp.float32(1.0), f1, jnp.bool_(True), jnp.int32(0))
+
+    def search(_):
+        # Step 2: alpha_init = argmin on [delta, 1]
+        fun = lambda a: f_alpha(a, m, dm, y, beta, dbeta, lam)
+        a_init = golden_section(fun, jnp.float32(delta), jnp.float32(1.0))
+
+        # Step 3: Armijo backtracking a_init * b^j
+        def cond(state):
+            a, fa, k = state
+            return jnp.logical_and(fa > f0 + a * sigma * D, k < max_backtracks)
+
+        def body(state):
+            a, _, k = state
+            a_new = a * b
+            return a_new, fun(a_new), k + 1
+
+        a0 = a_init
+        state = (a0, fun(a0), jnp.int32(0))
+        a, fa, k = jax.lax.while_loop(cond, body, state)
+        return LineSearchResult(a, fa, jnp.bool_(False), k)
+
+    return jax.lax.cond(unit_ok, take_unit, search, operand=None)

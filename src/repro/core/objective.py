@@ -1,0 +1,67 @@
+"""L1-regularized logistic regression objective (paper eq. (1)-(4)).
+
+All functions work from the *margin cache* m_i = beta^T x_i — the paper's
+O(n) state (it stores exp(beta^T x_i)); every line-search/objective
+evaluation is O(n + p), never a pass over X.
+
+Conventions: y in {-1, +1}; X dense (n, p) float32 (sparse data is densified
+per feature tile by the pipeline — see DESIGN.md §2.3 on TPU adaptation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# numerical guards (BBR/GLMNET-style probability clamp)
+P_EPS = 1e-5
+W_MIN = 1e-6
+
+
+def margins(X: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    return X @ beta
+
+
+def neg_log_likelihood(m: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """L(beta) = sum_i log(1 + exp(-y_i m_i)), computed stably."""
+    return jnp.sum(jax.nn.softplus(-y * m))
+
+
+def l1_norm(beta: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(jnp.abs(beta))
+
+
+def objective(m: jnp.ndarray, y: jnp.ndarray, beta: jnp.ndarray, lam: float) -> jnp.ndarray:
+    """f(beta) = L(beta) + lam * ||beta||_1, from cached margins."""
+    return neg_log_likelihood(m, y) + lam * l1_norm(beta)
+
+
+def working_stats(m: jnp.ndarray, y: jnp.ndarray):
+    """GLMNET working responses (paper eq. (4)).
+
+    p_i = sigmoid(m_i); w_i = p(1-p); z_i = ((y+1)/2 - p)/w.
+    Returns (w, z) with probability clamped for numerical stability.
+    """
+    p = jax.nn.sigmoid(m)
+    p = jnp.clip(p, P_EPS, 1.0 - P_EPS)
+    w = jnp.maximum(p * (1.0 - p), W_MIN)
+    z = ((y + 1.0) * 0.5 - p) / w
+    return w, z
+
+
+def grad_nll_from_margins(m: jnp.ndarray, y: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    """nabla L(beta) = X^T (p - (y+1)/2)   (for the Armijo D term)."""
+    p = jax.nn.sigmoid(m)
+    return X.T @ (p - (y + 1.0) * 0.5)
+
+
+def lambda_max(X: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Smallest lambda for which beta* = 0 (Algorithm 5 start).
+
+    At beta=0: p=0.5, w=1/4, z=2y  =>  |sum_i w x_ij z| = |0.5 sum_i x_ij y_i|.
+    """
+    return jnp.max(jnp.abs(0.5 * (X.T @ y)))
+
+
+def soft_threshold(x: jnp.ndarray, a) -> jnp.ndarray:
+    """T(x, a) = sgn(x) max(|x| - a, 0)   (paper eq. (6))."""
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - a, 0.0)

@@ -1,0 +1,60 @@
+"""Regularization path (paper Algorithm 5).
+
+Find lambda_max for which beta = 0, then solve with
+lambda = lambda_max * 2^{-i}, i = 1..path_len, warm-starting each solve from
+the previous beta.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax.numpy as jnp
+
+from repro.core.dglmnet import DGLMNETOptions, FitResult, fit
+from repro.core.objective import lambda_max
+
+
+@dataclass
+class PathPoint:
+    lam: float
+    nnz: int
+    f: float
+    n_iters: int
+    beta: jnp.ndarray
+    metrics: dict = field(default_factory=dict)
+
+
+def regularization_path(
+    X,
+    y,
+    *,
+    path_len: int = 20,
+    opts: DGLMNETOptions = DGLMNETOptions(),
+    eval_fn: Optional[Callable[[jnp.ndarray], dict]] = None,
+    extra_lams: Optional[List[float]] = None,
+    verbose: bool = False,
+) -> List[PathPoint]:
+    """Returns one PathPoint per lambda (decreasing). ``eval_fn(beta)``
+    computes test metrics (e.g. AUPRC) per point — the paper's Figure 1."""
+    lmax = float(lambda_max(X, y))
+    lams = [lmax * 2.0 ** (-i) for i in range(1, path_len + 1)]
+    if extra_lams:
+        lams = sorted(set(lams) | set(extra_lams), reverse=True)
+
+    beta = jnp.zeros(X.shape[1], jnp.float32)
+    points: List[PathPoint] = []
+    for lam in lams:
+        res: FitResult = fit(X, y, lam, beta0=beta, opts=opts)
+        beta = res.beta
+        metrics = eval_fn(beta) if eval_fn else {}
+        points.append(
+            PathPoint(lam=lam, nnz=res.nnz, f=res.f, n_iters=res.n_iters,
+                      beta=beta, metrics=metrics)
+        )
+        if verbose:
+            print(
+                f"lambda={lam:10.4f} nnz={res.nnz:6d} f={res.f:12.4f} "
+                f"iters={res.n_iters:3d} {metrics}"
+            )
+    return points

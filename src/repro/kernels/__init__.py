@@ -1,0 +1,1 @@
+from repro.kernels.ops import flash_attention, gram_cd, logistic_stats  # noqa: F401

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention, causal.
+
+The transformer zoo's jnp path already avoids (S,S) materialization via
+query chunking + remat (models/attention.py); this kernel is the
+TPU-native endpoint of that hillclimb: one pass over KV blocks with
+running (max, denom, acc) statistics in VMEM scratch — no re-computation
+in the forward and MXU-aligned (128) tiles.
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks); the kv axis is innermost and
+sequential on TPU, so scratch accumulators persist across it (standard
+flash pattern: init at kv==0, finalize at the last kv block).
+
+Validated in interpret mode against ``ref.flash_attention_ref`` (= plain
+softmax attention); forward-only (training uses the jnp path's remat).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (Bq, D)
+    k = k_ref[0].astype(jnp.float32)                     # (Bk, D)
+    v = v_ref[0].astype(jnp.float32)                     # (Bk, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (Bq, Bk)
+
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (Bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                               # (Bq, Bk)
+    alpha = jnp.exp(m_prev - m_new)                      # (Bq, 1)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(p, v)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = True):
+    """q/k/v: (B, S, H, D) -> (B, S, H, D). Full (non-windowed) causal or
+    bidirectional attention; S must divide the block sizes."""
+    b, s, h, d = q.shape
+    assert k.shape == v.shape == (b, s, h, d)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    scale = 1.0 / (d ** 0.5)
+
+    # (B,S,H,D) -> (B*H, S, D)
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+    qf, kf, vf = fold(q), fold(k), fold(v)
+    nq, nk = s // block_q, s // block_k
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                          causal=causal, scale=scale),
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),       # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),       # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),       # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,37 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (CPU validation per the assignment);
+on a real TPU backend the kernels compile natively.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.gram_cd import gram_cd_pallas
+from repro.kernels.logistic_stats import logistic_stats_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def gram_cd(G, c, beta, dbeta0, lam, nu=1e-6):
+    """One CD cycle on a Gram tile; returns the within-cycle delta d."""
+    return gram_cd_pallas(G, c, beta, dbeta0, lam, nu, interpret=not _on_tpu())
+
+
+def logistic_stats(m, y, *, block: int = 4096):
+    """Fused (w, z, nll) from margins."""
+    return logistic_stats_pallas(m, y, block=block, interpret=not _on_tpu())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    """Blocked online-softmax attention (forward)."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=not _on_tpu())

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objective import P_EPS, W_MIN
+from repro.core.subproblem import cd_cycle_gram_tile
+
+
+def gram_cd_ref(G, c, beta, dbeta0, lam, nu):
+    """Oracle for kernels.gram_cd: the core solver's own sequential cycle."""
+    return cd_cycle_gram_tile(
+        G.astype(jnp.float32), c.astype(jnp.float32),
+        beta.astype(jnp.float32), dbeta0.astype(jnp.float32),
+        lam, nu,
+    )
+
+
+def logistic_stats_ref(m, y):
+    """Oracle for kernels.logistic_stats."""
+    m = m.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    p = jax.nn.sigmoid(m)
+    p = jnp.clip(p, P_EPS, 1.0 - P_EPS)
+    w = jnp.maximum(p * (1.0 - p), W_MIN)
+    z = ((y + 1.0) * 0.5 - p) / w
+    nll = jnp.sum(jax.nn.softplus(-y * m))
+    return w, z, nll
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Oracle for kernels.flash_attention: plain softmax attention."""
+    b, s, h, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(q.dtype)

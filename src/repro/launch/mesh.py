@@ -1,0 +1,38 @@
+"""Production meshes. Functions, not module-level constants: importing this
+module never touches jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import).
+
+v5e hardware constants for the roofline (EXPERIMENTS §Roofline) live here
+so benchmarks and the dry-run agree on them.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e per-chip constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW_PER_LINK = 50e9          # B/s per link (~ per-direction per link)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_dev_mesh(data: int = 2, model: int = 4):
+    """Small mesh for CPU tests (8 fake devices)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def num_chips(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

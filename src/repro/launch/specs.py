@@ -1,0 +1,83 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) combination —
+weak-type-correct, shardable, zero allocation.
+
+``decode`` shapes lower serve_step: ONE new token + a cache of seq_len.
+``long_500k`` is skipped for archs whose config says so (DESIGN.md §2.5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models.params import init_cache
+from repro.train.state import make_train_state
+from repro.train.train_step import IGNORE
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    if shape.name == "long_500k" and cfg.long_context_mode == "skip":
+        return (
+            "enc-dec speech translation: 500k-token decode is architecturally "
+            "meaningless and the decoder is full-attention (DESIGN.md §2.5)"
+        )
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Returns the kwargs pytree the lowered step function consumes.
+
+    train   -> {"batch": {tokens, labels, [embeds]}}
+    prefill -> {"batch": {tokens, [embeds]}}
+    decode  -> {"cache": ..., "cache_index": scalar, "tokens": (B,1)}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    kind = shape.kind
+
+    if kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        if cfg.encdec.enabled:
+            batch["frame_embeds"] = sds(
+                (b, cfg.encdec.encoder_seq_len, cfg.frontend.embed_dim), jnp.bfloat16
+            )
+            batch["tokens"] = sds((b, s), jnp.int32)
+            if kind == "train":
+                batch["labels"] = sds((b, s), jnp.int32)
+        elif cfg.frontend.kind != "none":
+            p = cfg.frontend.tokens_per_item
+            key = "patch_embeds" if cfg.frontend.kind == "vision_patches" else "frame_embeds"
+            batch[key] = sds((b, p, cfg.frontend.embed_dim), jnp.bfloat16)
+            batch["tokens"] = sds((b, s - p), jnp.int32)
+            if kind == "train":
+                batch["labels"] = sds((b, s), jnp.int32)
+        else:
+            batch["tokens"] = sds((b, s), jnp.int32)
+            if kind == "train":
+                batch["labels"] = sds((b, s), jnp.int32)
+        return {"batch": batch}
+
+    # decode: cache of seq_len, one new token
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    return {
+        "cache": cache,
+        "cache_index": sds((), jnp.int32),
+        "tokens": sds((b, 1), jnp.int32),
+    }
+
+
+def state_specs(cfg: ModelConfig):
+    """Train-state ShapeDtypeStructs (params + optimizer state + step)."""
+    return jax.eval_shape(lambda: make_train_state(jax.random.key(0), cfg))
+
+
+def params_specs(cfg: ModelConfig):
+    from repro.models.params import init_params
+
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))

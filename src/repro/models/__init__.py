@@ -1,0 +1,9 @@
+from repro.models.params import (  # noqa: F401
+    count_params_analytic,
+    forward,
+    init_cache,
+    init_params,
+    is_encdec,
+    param_bytes,
+)
+from repro.models.transformer import init_lm_cache, init_lm_params, lm_forward, segments_of  # noqa: F401

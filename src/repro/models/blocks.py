@@ -1,0 +1,261 @@
+"""Per-layer blocks: init + forward for every layer kind.
+
+Kinds:
+  attn        — pre-norm attention + dense MLP (SwiGLU/GELU)
+  moe         — pre-norm attention + MoE FFN (+ shared expert)
+  ssm         — Mamba2 block (norm + SSD + residual)
+  hybrid_attn — Zamba2-style: shared attention+MLP block (weights passed in,
+                stored once at model level) followed by the layer's own
+                Mamba2 block.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (
+    attention_forward,
+    cross_attention_forward,
+    init_attention,
+    init_cross_attention,
+    init_kv_cache,
+)
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.models.moe import init_moe, moe_forward
+from repro.models.ssm import init_mamba2, init_ssm_cache, mamba2_forward
+from repro.sharding.ctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, kind: str, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind == "attn":
+        return {
+            "ln1": init_norm(d, dtype, cfg.norm),
+            "attn": init_attention(ks[0], cfg.attention, d, dtype),
+            "ln2": init_norm(d, dtype, cfg.norm),
+            "mlp": init_mlp(ks[1], d, cfg.d_ff, dtype, act=cfg.act),
+        }
+    if kind == "moe":
+        return {
+            "ln1": init_norm(d, dtype, cfg.norm),
+            "attn": init_attention(ks[0], cfg.attention, d, dtype),
+            "ln2": init_norm(d, dtype, cfg.norm),
+            "moe": init_moe(ks[1], cfg.moe, d, dtype),
+        }
+    if kind == "ssm":
+        return {
+            "ln": init_norm(d, dtype, cfg.norm),
+            "mamba": init_mamba2(ks[0], cfg.ssm, d, dtype),
+        }
+    if kind == "hybrid_attn":
+        # own mamba block; the shared attention block params live at model level
+        return {
+            "ln": init_norm(d, dtype, cfg.norm),
+            "mamba": init_mamba2(ks[0], cfg.ssm, d, dtype),
+        }
+    if kind == "hybrid_period":
+        # one zamba2 period: attn_every sub-layers (last one applies the
+        # shared attention block), stacked on a leading sub-layer axis
+        k = cfg.hybrid.attn_every
+        sub = jax.random.split(key, k)
+        return {"sub": jax.vmap(lambda kk: init_layer(kk, cfg, "ssm", dtype))(sub)}
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def init_shared_attn_block(key, cfg: ModelConfig, dtype):
+    """Zamba2 shared transformer block (attention + MLP), stored once."""
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_norm(d, dtype, cfg.norm),
+        "attn": init_attention(ks[0], cfg.attention, d, dtype),
+        "ln2": init_norm(d, dtype, cfg.norm),
+        "mlp": init_mlp(ks[1], d, cfg.d_ff, dtype, act=cfg.act),
+    }
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int, dtype):
+    """Decode-time cache for one layer of the given kind."""
+    if kind in ("attn", "moe"):
+        return {"kv": init_kv_cache(cfg.attention, cfg.d_model, batch, cache_len, dtype)}
+    if kind == "ssm":
+        return {"ssm": init_ssm_cache(cfg.ssm, cfg.d_model, batch, dtype)}
+    if kind == "hybrid_attn":
+        return {
+            "kv": init_kv_cache(cfg.attention, cfg.d_model, batch, cache_len, dtype),
+            "ssm": init_ssm_cache(cfg.ssm, cfg.d_model, batch, dtype),
+        }
+    if kind == "hybrid_period":
+        k = cfg.hybrid.attn_every
+        one = init_ssm_cache(cfg.ssm, cfg.d_model, batch, dtype)
+        return {
+            "ssm": jax.tree.map(lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), one),
+            # only the last sub-layer attends; a single KV cache per period
+            "kv": init_kv_cache(cfg.attention, cfg.d_model, batch, cache_len, dtype),
+        }
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _attn_sub(p, x, cfg, positions, mode, cache, cache_index, window, window_slice):
+    h = apply_norm(p["ln1"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    y, new_kv = attention_forward(
+        p["attn"], h, cfg=cfg.attention, d_model=cfg.d_model, positions=positions,
+        mode=mode, cache=cache, cache_index=cache_index, window=window,
+        window_slice=window_slice,
+    )
+    return x + y, new_kv
+
+
+def layer_forward(
+    p,
+    x: jnp.ndarray,
+    *,
+    cfg: ModelConfig,
+    kind: str,
+    positions: jnp.ndarray,
+    mode: str = "train",                   # train | prefill | decode
+    cache: Optional[dict] = None,
+    cache_index=None,
+    window: int = 0,
+    window_slice: bool = False,
+    shared_block=None,                      # zamba2 shared attn+mlp params
+    deterministic: bool = True,
+) -> Tuple[jnp.ndarray, Optional[dict], dict]:
+    aux = {}
+    new_cache = {}
+
+    # layer-boundary residual: shard d_model over `model` so the remat-saved
+    # per-layer stack is 1/16th (sequence-parallel-style; XLA re-gathers at
+    # the first use inside the layer). Critical for the 512-dev dry-run fit.
+    if mode == "train":
+        x = constrain(x, "batch", None, "model")
+
+    if kind in ("attn", "moe"):
+        kv = cache.get("kv") if cache else None
+        x, new_kv = _attn_sub(p, x, cfg, positions, mode, kv, cache_index, window, window_slice)
+        if new_kv is not None:
+            new_cache["kv"] = new_kv
+        h = apply_norm(p["ln2"], x, kind=cfg.norm, eps=cfg.norm_eps)
+        if kind == "attn":
+            x = x + apply_mlp(p["mlp"], h, act=cfg.act)
+        else:
+            y, aux = moe_forward(p["moe"], h, cfg=cfg.moe, deterministic=deterministic)
+            x = x + y
+        return x, (new_cache or None), aux
+
+    if kind == "hybrid_period":
+        # k-1 plain mamba sub-layers, then one hybrid (shared-attn + mamba)
+        k = cfg.hybrid.attn_every
+        new_ssm, kv_cache = [], None
+        for j in range(k):
+            p_j = jax.tree.map(lambda a: a[j], p["sub"])
+            sub_kind = "hybrid_attn" if j == k - 1 else "ssm"
+            c_j = None
+            if cache is not None:
+                c_j = {"ssm": jax.tree.map(lambda a: a[j], cache["ssm"])}
+                if sub_kind == "hybrid_attn":
+                    c_j["kv"] = cache["kv"]
+            x, new_c, _ = layer_forward(
+                p_j, x, cfg=cfg, kind=sub_kind, positions=positions, mode=mode,
+                cache=c_j, cache_index=cache_index, window=window,
+                window_slice=window_slice, shared_block=shared_block,
+                deterministic=deterministic,
+            )
+            if new_c is not None:
+                new_ssm.append(new_c["ssm"])
+                if "kv" in new_c:
+                    kv_cache = new_c["kv"]
+        if new_ssm:
+            out_cache = {"ssm": jax.tree.map(lambda *xs: jnp.stack(xs), *new_ssm)}
+            if kv_cache is not None:
+                out_cache["kv"] = kv_cache
+            return x, out_cache, aux
+        return x, None, aux
+
+    if kind in ("ssm", "hybrid_attn"):
+        if kind == "hybrid_attn":
+            assert shared_block is not None, "hybrid layer needs the shared block"
+            kv = cache.get("kv") if cache else None
+            x, new_kv = _attn_sub(
+                shared_block, x, cfg, positions, mode, kv, cache_index,
+                window or (cfg.long_context_window if window_slice else 0), window_slice,
+            )
+            if new_kv is not None:
+                new_cache["kv"] = new_kv
+            hmlp = apply_norm(shared_block["ln2"], x, kind=cfg.norm, eps=cfg.norm_eps)
+            x = x + apply_mlp(shared_block["mlp"], hmlp, act=cfg.act)
+        h = apply_norm(p["ln"], x, kind=cfg.norm, eps=cfg.norm_eps)
+        y, new_ssm = mamba2_forward(
+            p["mamba"], h, cfg=cfg.ssm, d_model=cfg.d_model,
+            mode=mode, cache=(cache.get("ssm") if cache else None),
+        )
+        if new_ssm is not None:
+            new_cache["ssm"] = new_ssm
+        return x + y, (new_cache or None), aux
+
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# encoder / decoder blocks (seamless-m4t)
+# ---------------------------------------------------------------------------
+
+def init_encoder_layer(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_norm(d, dtype, cfg.norm),
+        "attn": init_attention(ks[0], cfg.attention, d, dtype),
+        "ln2": init_norm(d, dtype, cfg.norm),
+        "mlp": init_mlp(ks[1], d, cfg.d_ff, dtype, act=cfg.act),
+    }
+
+
+def encoder_layer_forward(p, x, *, cfg: ModelConfig, positions):
+    h = apply_norm(p["ln1"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    y, _ = attention_forward(
+        p["attn"], h, cfg=cfg.attention, d_model=cfg.d_model,
+        positions=positions, mode="train", causal=False,  # bidirectional
+    )
+    x = x + y
+    h = apply_norm(p["ln2"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    return x + apply_mlp(p["mlp"], h, act=cfg.act)
+
+
+def init_decoder_layer(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(d, dtype, cfg.norm),
+        "attn": init_attention(ks[0], cfg.attention, d, dtype),
+        "ln_x": init_norm(d, dtype, cfg.norm),
+        "xattn": init_cross_attention(ks[1], cfg.attention, d, dtype),
+        "ln2": init_norm(d, dtype, cfg.norm),
+        "mlp": init_mlp(ks[2], d, cfg.d_ff, dtype, act=cfg.act),
+    }
+
+
+def decoder_layer_forward(
+    p, x, memory, *, cfg: ModelConfig, positions, mode="train",
+    cache=None, cache_index=None,
+):
+    kv = cache.get("kv") if cache else None
+    x, new_kv = _attn_sub(p, x, cfg, positions, mode, kv, cache_index, 0, False)
+    h = apply_norm(p["ln_x"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    x = x + cross_attention_forward(p["xattn"], h, memory, cfg=cfg.attention, d_model=cfg.d_model)
+    h = apply_norm(p["ln2"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    x = x + apply_mlp(p["mlp"], h, act=cfg.act)
+    new_cache = {"kv": new_kv} if new_kv is not None else None
+    return x, new_cache

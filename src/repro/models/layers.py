@@ -1,0 +1,148 @@
+"""Core NN layers, functional style.
+
+Parameters are plain dict pytrees created by ``init_*`` helpers; forward
+functions are pure. No flax/haiku — the substrate is hand-rolled per the
+assignment. Initializers mirror common practice (truncated-normal fan-in
+for projections, ones for norm scales).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, dtype, stddev):
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, scale: float = 1.0):
+    """Fan-in scaled init for a (d_in, d_out) projection."""
+    return _normal(key, (d_in, d_out), dtype, scale / math.sqrt(max(d_in, 1)))
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return _normal(key, (vocab, d), dtype, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(d: int, dtype, kind: str = "rmsnorm"):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, *, kind: str = "rmsnorm", eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(f"unknown norm {kind!r}")
+    y = y * p["scale"].astype(jnp.float32)
+    if kind == "layernorm":
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gated_rmsnorm(scale, x, gate, *, eps: float = 1e-5):
+    """Mamba2's norm: RMSNorm(x * silu(gate)) (norm-before-gate=False)."""
+    xf = x.astype(jnp.float32) * jax.nn.silu(gate.astype(jnp.float32))
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, *, act: str = "silu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "silu":  # SwiGLU: gate + up + down
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(p, x, *, act: str = "silu"):
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh) or (..., S, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    if x.ndim == ang.ndim + 1:                         # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions_thw: jnp.ndarray,  # (..., S, 3): temporal/height/width position ids
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE (arXiv:2409.12191): the rotary half-dim is split into
+    (t, h, w) sections, each rotated by its own position stream."""
+    dh = x.shape[-1]
+    half = dh // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(dh, theta)                      # (half,)
+    # section id per frequency index
+    sec_sizes = jnp.array(sections)
+    sec_id = jnp.repeat(jnp.arange(3), sec_sizes, total_repeat_length=half)  # (half,)
+    # pick the position stream per frequency
+    pos = jnp.take_along_axis(
+        positions_thw.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, positions_thw.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )                                                   # (..., S, half)
+    ang = pos * freqs                                   # (..., S, half)
+    if x.ndim == ang.ndim + 1:
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_mrope_positions(positions: jnp.ndarray) -> jnp.ndarray:
+    """For pure-text streams all three M-RoPE position ids coincide."""
+    return jnp.stack([positions, positions, positions], axis=-1)

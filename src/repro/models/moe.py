@@ -1,0 +1,159 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded dispatch,
+shared expert(s), load-balance + router-z auxiliary losses.
+
+Dispatch is *grouped* (GShard/Switch "group_size" semantics): tokens are
+split into DP groups matching the data-parallel extent of the ambient mesh,
+each group routes into a per-group capacity slice, and all gathers/scatters
+are group-local — so under SPMD partitioning they are pointwise over the
+sharded group axis and never become global gathers (which XLA partitions
+catastrophically at deepseek scale). The expert einsum contracts a
+(G, E, C, D) buffer sharded (batch, model, -, -) against weights gathered
+from their FSDP shards — the cross-device token movement is the dispatch
+all-to-all implied by (batch) -> (model) resharding.
+
+Rank-within-expert uses a stable sort (O(Tk log Tk)) rather than the
+classic (Tk, E) one-hot cumsum (O(Tk*E)) — the latter dominates the whole
+step at T ~ 1e6, E = 256.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import dense_init
+from repro.sharding.ctx import constrain, current_mesh
+
+
+def init_moe(key, cfg: MoEConfig, d_model: int, dtype):
+    e, f = cfg.num_experts, cfg.expert_d_ff
+    ks = jax.random.split(key, 5)
+    p = {"router": dense_init(ks[0], d_model, e, jnp.float32)}  # router kept f32
+    # per-expert weights, stacked on a leading E axis
+    p["w_gate"] = _stack_init(ks[1], e, d_model, f, dtype)
+    p["w_up"] = _stack_init(ks[2], e, d_model, f, dtype)
+    p["w_down"] = _stack_init(ks[3], e, f, d_model, dtype)
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(kk[0], d_model, fs, dtype),
+            "w_up": dense_init(kk[1], d_model, fs, dtype),
+            "w_down": dense_init(kk[2], fs, d_model, dtype),
+        }
+    return p
+
+
+def _stack_init(key, e, d_in, d_out, dtype):
+    return dense_init(key, d_in, e * d_out, dtype).reshape(d_in, e, d_out).transpose(1, 0, 2)
+
+
+def capacity(tokens: int, cfg: MoEConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, ((c + 7) // 8) * 8)  # pad to multiple of 8
+
+
+def _num_groups(tokens: int) -> int:
+    """DP groups = data-parallel extent of the ambient mesh (1 without)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            g *= mesh.shape[a]
+    return g if tokens % g == 0 else 1
+
+
+def _route_group(xg, router, cfg: MoEConfig, cap: int):
+    """Group-local routing. xg: (Tg, D). Returns dispatch/combine indices."""
+    tg = xg.shape[0]
+    e, k = cfg.num_experts, cfg.top_k
+    logits = xg.astype(jnp.float32) @ router                     # (Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # (Tg, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = expert_idx.reshape(-1)                              # (Tg*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(tg * k, dtype=jnp.int32) - starts[flat_e[order]]
+    pos = jnp.zeros((tg * k,), jnp.int32).at[order].set(pos_sorted).reshape(tg, k)
+    keep = pos < cap
+
+    tok_ids = jnp.broadcast_to(jnp.arange(tg)[:, None], (tg, k))
+    scat_e = jnp.where(keep, expert_idx, e)                      # e = sentinel row
+    scat_c = jnp.where(keep, pos, 0)
+    buf_idx = jnp.full((e + 1, cap), tg, jnp.int32).at[
+        scat_e.reshape(-1), scat_c.reshape(-1)
+    ].set(tok_ids.reshape(-1), mode="drop")[:e]                  # (E, C)
+
+    return logits, probs, gate_vals, expert_idx, pos, keep, buf_idx
+
+
+def moe_forward(p, x: jnp.ndarray, *, cfg: MoEConfig, deterministic: bool = True,
+                rng=None) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (B, S, D), aux dict with load-balance losses."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    groups = _num_groups(t)
+    tg = t // groups
+    cap = capacity(tg, cfg)
+
+    xf = x.reshape(groups, tg, d)
+    xf = constrain(xf, "batch", None, None)
+
+    route = jax.vmap(lambda xg: _route_group(xg, p["router"], cfg, cap))
+    logits, probs, gate_vals, expert_idx, pos, keep, buf_idx = route(xf)
+
+    # group-local dispatch gather: (G, Tg+1, D)[g, buf_idx[g]] -> (G,E,C,D)
+    xpad = jnp.concatenate([xf, jnp.zeros((groups, 1, d), xf.dtype)], axis=1)
+    expert_in = jax.vmap(lambda xp, bi: jnp.take(xp, bi.reshape(-1), axis=0))(
+        xpad, buf_idx
+    ).reshape(groups, e, cap, d)
+    expert_in = constrain(expert_in, "batch", "model", None, None)
+
+    # re-gather FSDP weight shards so the expert einsum is conflict-free
+    wg = constrain(p["w_gate"], "model", None, None)
+    wu = constrain(p["w_up"], "model", None, None)
+    wd = constrain(p["w_down"], "model", None, None)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, wg)) * jnp.einsum(
+        "gecd,edf->gecf", expert_in, wu
+    )
+    h = constrain(h, "batch", "model", None, None)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, wd)             # (G, E, C, D)
+    expert_out = constrain(expert_out, "batch", "model", None, None)
+
+    # group-local combine gather
+    flat_slot = (expert_idx * cap + pos).reshape(groups, tg * k)  # (G, Tg*k)
+    eo = expert_out.reshape(groups, e * cap, d)
+    gathered = jnp.take_along_axis(
+        eo, jnp.where(keep.reshape(groups, tg * k), flat_slot, 0)[:, :, None], axis=1
+    ).reshape(groups, tg, k, d)
+    gathered = constrain(gathered, "batch", None, None, None)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    y = jnp.einsum("gtkd,gtk->gtd", gathered, gate_vals.astype(gathered.dtype))
+    y = y.reshape(t, d)
+
+    if "shared" in p:
+        sp = p["shared"]
+        xt = x.reshape(t, d)
+        hs = jax.nn.silu(xt @ sp["w_gate"]) * (xt @ sp["w_up"])
+        y = y + (hs @ sp["w_down"]).astype(y.dtype)
+
+    # aux losses (Switch-style load balance + router z-loss), global means
+    me = probs.reshape(t, e).mean(0)                             # (E,)
+    ce = jax.nn.one_hot(expert_idx.reshape(t, k)[:, 0], e).mean(0)
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits.reshape(t, e), axis=-1) ** 2)
+    aux = {
+        "moe_lb_loss": cfg.aux_loss_weight * lb_loss,
+        "moe_z_loss": cfg.router_z_loss_weight * z_loss,
+        "moe_drop_frac": 1.0 - keep.mean(),
+    }
+    return y.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,90 @@
+"""Parameter counting and model API dispatch (LM vs enc-dec).
+
+Counts are derived from ``jax.eval_shape`` over the real initializers, so
+they are exact for this implementation by construction. MoE active-param
+counts weight expert stacks by top_k/num_experts (for 6·N_active·D model
+FLOPs in the roofline).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.encdec.enabled
+
+
+def init_params(key, cfg: ModelConfig):
+    if is_encdec(cfg):
+        from repro.models.seq2seq import init_seq2seq_params
+
+        return init_seq2seq_params(key, cfg)
+    from repro.models.transformer import init_lm_params
+
+    return init_lm_params(key, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    if is_encdec(cfg):
+        from repro.models.seq2seq import init_seq2seq_cache
+
+        return init_seq2seq_cache(cfg, batch, cache_len, dtype)
+    from repro.models.transformer import init_lm_cache
+
+    return init_lm_cache(cfg, batch, cache_len, dtype)
+
+
+def forward(params, inputs, cfg: ModelConfig, **kw):
+    if is_encdec(cfg):
+        from repro.models.seq2seq import seq2seq_forward
+
+        kw.pop("long_mode", None)
+        kw.pop("deterministic", None)
+        return seq2seq_forward(params, inputs, cfg, **kw)
+    from repro.models.transformer import lm_forward
+
+    return lm_forward(params, inputs, cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# counting
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=64)
+def _shapes(cfg: ModelConfig):
+    out = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+    return out
+
+
+def _leaf_sizes(tree) -> Dict[str, int]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    sizes = {}
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        sizes[name] = int(jnp.prod(jnp.array(leaf.shape))) if leaf.shape else 1
+    return sizes
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    sizes = _leaf_sizes(_shapes(cfg))
+    total = 0
+    frac = (
+        cfg.moe.top_k / cfg.moe.num_experts if (cfg.moe.enabled and active_only) else 1.0
+    )
+    for name, sz in sizes.items():
+        is_expert = ("w_gate" in name or "w_up" in name or "w_down" in name) and (
+            "moe" in name and "shared" not in name
+        )
+        total += int(sz * (frac if is_expert else 1.0))
+    return total
+
+
+def param_bytes(cfg: ModelConfig) -> int:
+    itemsize = 2 if cfg.param_dtype == "bfloat16" else 4
+    return count_params_analytic(cfg) * itemsize

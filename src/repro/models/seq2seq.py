@@ -1,0 +1,132 @@
+"""Encoder-decoder backbone (seamless-m4t). The audio frontend is a stub:
+inputs carry precomputed frame embeddings (B, S_enc, E) per the assignment
+carve-out; we own the projector + both transformer stacks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import init_kv_cache
+from repro.models.blocks import (
+    decoder_layer_forward,
+    encoder_layer_forward,
+    init_decoder_layer,
+    init_encoder_layer,
+)
+from repro.models.layers import apply_norm, dense_init, embed_init, init_norm
+from repro.models.transformer import dtype_of
+
+
+def init_seq2seq_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.param_dtype)
+    n = cfg.num_layers  # per stack
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], n)
+    dec_keys = jax.random.split(ks[1], n)
+    return {
+        "frontend_proj": dense_init(ks[2], cfg.frontend.embed_dim, cfg.d_model, dtype),
+        "embed": embed_init(ks[3], cfg.padded_vocab, cfg.d_model, dtype),
+        "encoder": jax.vmap(lambda k: init_encoder_layer(k, cfg, dtype))(enc_keys),
+        "decoder": jax.vmap(lambda k: init_decoder_layer(k, cfg, dtype))(dec_keys),
+        "enc_norm": init_norm(cfg.d_model, dtype, cfg.norm),
+        "dec_norm": init_norm(cfg.d_model, dtype, cfg.norm),
+        "lm_head": dense_init(ks[4], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+
+
+def init_seq2seq_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or dtype_of(cfg.compute_dtype)
+    n = cfg.num_layers
+    one = {"kv": init_kv_cache(cfg.attention, cfg.d_model, batch, cache_len, dtype)}
+    dec = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), one)
+    # encoder memory is recomputed at prefill and carried in the cache
+    mem = jnp.zeros((batch, cfg.encdec.encoder_seq_len, cfg.d_model), dtype)
+    return {"decoder": dec, "memory": mem}
+
+
+def encode(params, frame_embeds, cfg: ModelConfig):
+    cdtype = dtype_of(cfg.compute_dtype)
+    x = frame_embeds.astype(cdtype) @ params["frontend_proj"].astype(cdtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+
+    def body(carry, p_l):
+        return encoder_layer_forward(p_l, carry, cfg=cfg, positions=positions), None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+    else:
+        for i in range(cfg.num_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["encoder"]))
+    return apply_norm(params["enc_norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+
+
+def seq2seq_forward(
+    params,
+    inputs: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    mode: str = "train",
+    cache: Optional[dict] = None,
+    cache_index=None,
+):
+    """inputs: frame_embeds (B,S_enc,E) [train/prefill], tokens (B,S_dec).
+
+    Returns (logits, new_cache, aux)."""
+    cdtype = dtype_of(cfg.compute_dtype)
+    tokens = inputs["tokens"]
+    b, s = tokens.shape
+
+    if mode == "decode":
+        assert cache is not None and cache_index is not None
+        memory = cache["memory"]
+        positions = jnp.broadcast_to(
+            jnp.asarray(cache_index, jnp.int32)[None, None], (b, s)
+        )
+    else:
+        memory = encode(params, inputs["frame_embeds"], cfg)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdtype)
+
+    def apply_layer(x, p_l, cache_l):
+        return decoder_layer_forward(
+            p_l, x, memory, cfg=cfg, positions=positions, mode=mode,
+            cache=cache_l, cache_index=cache_index,
+        )
+
+    if cfg.remat and mode == "train":
+        apply_layer = jax.checkpoint(apply_layer)
+
+    dec_cache = cache["decoder"] if cache is not None else None
+
+    def body(carry, per_layer):
+        p_l, cache_l = per_layer
+        y, new_cache_l = apply_layer(carry, p_l, cache_l)
+        return y, new_cache_l
+
+    if cfg.scan_layers:
+        x, new_dec_cache = jax.lax.scan(body, x, (params["decoder"], dec_cache))
+    else:
+        new_cs = []
+        for i in range(cfg.num_layers):
+            p_l = jax.tree.map(lambda a: a[i], params["decoder"])
+            c_l = jax.tree.map(lambda a: a[i], dec_cache) if dec_cache is not None else None
+            x, nc_ = body(x, (p_l, c_l))
+            new_cs.append(nc_)
+        new_dec_cache = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *new_cs)
+            if new_cs and new_cs[0] is not None else None
+        )
+
+    h = apply_norm(params["dec_norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(h.dtype)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"decoder": new_dec_cache, "memory": memory.astype(cdtype)}
+    return logits, new_cache, {}

@@ -1,0 +1,249 @@
+"""Unified causal LM covering dense / MoE / SSM / hybrid / VLM arch types.
+
+Layers are grouped into *segments* of consecutive identical kinds (dense
+archs: 1 segment; deepseek-v3: dense-prefix + MoE segments; zamba2:
+alternating ssm / hybrid_attn runs). Each segment's parameters are stacked
+on a leading layer axis and executed with ``lax.scan`` — HLO size stays
+O(#segments), not O(depth), which is what keeps the 512-device dry-run
+compile tractable. Remat is applied per layer inside the scan.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.blocks import (
+    init_layer,
+    init_layer_cache,
+    init_shared_attn_block,
+    layer_forward,
+)
+from repro.models.layers import apply_norm, dense_init, embed_init, init_norm
+from repro.sharding.ctx import constrain
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+def segments_of(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """Group layer kinds into (kind, run-length) segments.
+
+    Hybrid archs (zamba2: attention every k-th layer) would fragment into
+    ~2L/k segments; instead they become ONE scanned segment of
+    "hybrid_period" super-layers (k-1 mamba blocks + 1 shared-attn block)
+    plus an ssm remainder — 27 compiles -> 2 for zamba2-7b.
+    """
+    if cfg.arch_type == "hybrid" and cfg.hybrid is not None:
+        k = cfg.hybrid.attn_every
+        groups, rem = divmod(cfg.num_layers, k)
+        segs = [("hybrid_period", groups)] if groups else []
+        if rem:
+            segs.append(("ssm", rem))
+        return segs
+    segs: List[Tuple[str, int]] = []
+    for k in cfg.layer_kinds():
+        if segs and segs[-1][0] == k:
+            segs[-1] = (k, segs[-1][1] + 1)
+        else:
+            segs.append((k, 1))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_lm_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.param_dtype)
+    segs = segments_of(cfg)
+    keys = jax.random.split(key, len(segs) + 5)
+
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.d_model, dtype, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.padded_vocab, dtype)
+
+    seg_params = []
+    for i, (kind, n) in enumerate(segs):
+        lk = jax.random.split(keys[2 + i], n)
+        seg_params.append(jax.vmap(lambda k: init_layer(k, cfg, kind, dtype))(lk))
+    params["segments"] = seg_params
+
+    if cfg.arch_type == "hybrid" and cfg.hybrid is not None and cfg.hybrid.shared_attn:
+        params["shared_attn"] = init_shared_attn_block(keys[-3], cfg, dtype)
+
+    if cfg.frontend.kind != "none":
+        params["frontend_proj"] = dense_init(
+            keys[-2], cfg.frontend.embed_dim, cfg.d_model, dtype
+        )
+
+    if cfg.mtp_depth:
+        mk = jax.random.split(keys[-1], 2)
+        params["mtp"] = {
+            "proj": dense_init(mk[0], 2 * cfg.d_model, cfg.d_model, dtype),
+            "layer": jax.tree.map(
+                lambda x: x[None], init_layer(mk[1], cfg, cfg.layer_kinds()[-1], dtype)
+            ),
+        }
+    return params
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or dtype_of(cfg.compute_dtype)
+    segs = segments_of(cfg)
+
+    def seg_cache(kind, n):
+        one = init_layer_cache(cfg, kind, batch, cache_len, dtype)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), one)
+
+    return {"segments": [seg_cache(k, n) for k, n in segs]}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _segment_forward(seg_p, x, *, cfg, kind, n, positions, mode, seg_cache,
+                     cache_index, window, window_slice, shared_block, deterministic):
+    def apply_layer(x, p_l, cache_l):
+        return layer_forward(
+            p_l, x, cfg=cfg, kind=kind, positions=positions, mode=mode,
+            cache=cache_l, cache_index=cache_index, window=window,
+            window_slice=window_slice, shared_block=shared_block,
+            deterministic=deterministic,
+        )
+
+    if cfg.remat and mode == "train":
+        apply_layer = jax.checkpoint(apply_layer)
+
+    if n == 1:
+        p0 = jax.tree.map(lambda a: a[0], seg_p)
+        c0 = jax.tree.map(lambda a: a[0], seg_cache) if seg_cache is not None else None
+        x, new_c, aux = apply_layer(x, p0, c0)
+        new_c = jax.tree.map(lambda a: a[None], new_c) if new_c is not None else None
+        return x, new_c, aux
+
+    if not cfg.scan_layers:
+        # unrolled python loop: O(depth) HLO, but exact cost_analysis
+        # (HloCostAnalysis counts while-loop bodies once) — dry-run uses this.
+        new_cs, auxs = [], []
+        for i in range(n):
+            p_l = jax.tree.map(lambda a: a[i], seg_p)
+            c_l = jax.tree.map(lambda a: a[i], seg_cache) if seg_cache is not None else None
+            x, new_c, aux_l = apply_layer(x, p_l, c_l)
+            new_cs.append(new_c)
+            auxs.append(aux_l)
+        if new_cs[0] is not None:
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_cs)
+        else:
+            new_cache = None
+        aux = {}
+        for a in auxs:
+            for k_, v_ in (a or {}).items():
+                aux[k_] = aux.get(k_, 0.0) + v_
+        return x, new_cache, aux
+
+    def body(carry, per_layer):
+        p_l, cache_l = per_layer
+        y, new_cache_l, aux_l = apply_layer(carry, p_l, cache_l)
+        return y, (new_cache_l, aux_l)
+
+    x, (new_cache, auxs) = jax.lax.scan(body, x, (seg_p, seg_cache))
+    aux = jax.tree.map(lambda a: jnp.sum(a, axis=0), auxs) if auxs else {}
+    return x, new_cache, aux
+
+
+def lm_forward(
+    params,
+    inputs: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    mode: str = "train",                  # train | prefill | decode
+    cache: Optional[dict] = None,
+    cache_index=None,                     # int32 scalar: tokens already cached
+    long_mode: bool = False,              # long_500k: sliding-window/native path
+    deterministic: bool = True,
+):
+    """Returns (logits, new_cache, aux)."""
+    cdtype = dtype_of(cfg.compute_dtype)
+    tokens = inputs["tokens"]
+    b, s_text = tokens.shape
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdtype)
+    x = constrain(x, "batch", None, None)
+
+    prefix_len = 0
+    for key_name in ("patch_embeds", "frame_embeds"):
+        if key_name in inputs and inputs[key_name] is not None:
+            pe = inputs[key_name].astype(cdtype) @ params["frontend_proj"].astype(cdtype)
+            x = jnp.concatenate([pe, x], axis=1)
+            prefix_len = pe.shape[1]
+            break
+    s = x.shape[1]
+
+    if mode == "decode":
+        assert cache_index is not None
+        positions = jnp.broadcast_to(
+            jnp.asarray(cache_index, jnp.int32)[None, None], (b, s)
+        )
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+
+    window = cfg.attention.sliding_window
+    window_slice = False
+    if long_mode and cfg.long_context_mode == "sliding_window":
+        window = cfg.long_context_window
+        window_slice = mode == "decode"
+    if long_mode and cfg.arch_type == "hybrid":
+        # zamba2: SSM spine native; shared attn blocks go sliding-window
+        window = cfg.long_context_window
+        window_slice = mode == "decode"
+
+    segs = segments_of(cfg)
+    shared_block = params.get("shared_attn")
+    new_seg_caches = []
+    aux_total: Dict[str, jnp.ndarray] = {}
+
+    for i, (kind, n) in enumerate(segs):
+        seg_cache = cache["segments"][i] if cache is not None else None
+        x, new_c, aux = _segment_forward(
+            params["segments"][i], x, cfg=cfg, kind=kind, n=n, positions=positions,
+            mode=mode, seg_cache=seg_cache, cache_index=cache_index, window=window,
+            window_slice=window_slice, shared_block=shared_block,
+            deterministic=deterministic,
+        )
+        x = constrain(x, "batch", None, None)
+        new_seg_caches.append(new_c)
+        for k_, v_ in (aux or {}).items():
+            aux_total[k_] = aux_total.get(k_, 0.0) + v_
+
+    h = apply_norm(params["final_norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head.astype(h.dtype)
+    logits = constrain(logits, "batch", None, "model")
+
+    # ----- MTP (DeepSeek-V3 multi-token prediction), training only --------
+    if cfg.mtp_depth and mode == "train" and s_text > 1:
+        emb_next = jnp.take(params["embed"], jnp.roll(tokens, -1, axis=1), axis=0)
+        if prefix_len:
+            h_text = h[:, prefix_len:, :]
+        else:
+            h_text = h
+        h_mtp = jnp.concatenate([h_text, emb_next.astype(h.dtype)], axis=-1)
+        h_mtp = h_mtp @ params["mtp"]["proj"].astype(h.dtype)
+        mtp_pos = positions[:, prefix_len:] if prefix_len else positions
+        p0 = jax.tree.map(lambda a: a[0], params["mtp"]["layer"])
+        h_mtp, _, _ = layer_forward(
+            p0, h_mtp, cfg=cfg, kind=cfg.layer_kinds()[-1], positions=mtp_pos,
+            mode="train", shared_block=shared_block,
+        )
+        aux_total["mtp_logits"] = h_mtp @ head.astype(h_mtp.dtype)
+
+    new_cache = {"segments": new_seg_caches} if mode in ("prefill", "decode") else None
+    return logits, new_cache, aux_total

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    make_optimizer,
+    sgd,
+)
+from repro.optim.schedule import constant, warmup_cosine  # noqa: F401

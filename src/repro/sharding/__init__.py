@@ -1,0 +1,7 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_axes,
+    cache_pspecs,
+    input_pspecs,
+    opt_state_pspecs,
+    param_pspecs,
+)

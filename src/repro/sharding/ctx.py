@@ -1,0 +1,121 @@
+"""Activation sharding-constraint context.
+
+Model code is mesh-agnostic; the launcher wraps lowering in
+``mesh_context(mesh)`` and the model calls ``constrain(x, "batch", None,
+"model")`` at propagation-critical points (embeddings, segment boundaries,
+logits). Outside a context (unit tests, single device) it is a no-op.
+
+Symbolic axes: "batch" -> ("pod","data") ∩ mesh axes; "model" -> "model";
+None -> unsharded. Every constraint is divisibility-guarded so batch=1
+decode shapes and odd head counts degrade to replication instead of erroring.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None
+)
+_UNROLL: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_unroll", default=False
+)
+
+
+@contextlib.contextmanager
+def unroll_context(enabled: bool = True):
+    """Unroll inner loops (attention query chunks) so HloCostAnalysis sees
+    every FLOP — used by the dry-run's cost pass, not for real training."""
+    tok = _UNROLL.set(enabled)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+def unroll_enabled() -> bool:
+    return _UNROLL.get()
+
+
+_FLASH_DECODE: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_flash_decode", default=False
+)
+
+
+@contextlib.contextmanager
+def flash_decode_context(enabled: bool = True):
+    """Enable sequence-parallel flash-decode attention (partial-softmax
+    psum combine over the seq-sharded KV cache) — see EXPERIMENTS §Perf."""
+    tok = _FLASH_DECODE.set(enabled)
+    try:
+        yield
+    finally:
+        _FLASH_DECODE.reset(tok)
+
+
+def flash_decode_enabled() -> bool:
+    return _FLASH_DECODE.get()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def _resolve(mesh: Mesh, sym):
+    """Returns a preference-ordered list of axis groups for a symbol."""
+    batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model = ("model",) if "model" in mesh.axis_names else ()
+    if sym == "batch":
+        return [batch if batch else None, None]
+    if sym == "model":
+        return [model if model else None, None]
+    if sym == "expert":
+        # experts prefer the full mesh (1 expert/device at deepseek scale),
+        # fall back to model-only (llama4's 16 experts), else replicate
+        return [model + batch if (model and batch) else None,
+                model if model else None, None]
+    return [sym, None]
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint under the ambient mesh (no-op without one)."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    if len(spec) != x.ndim:
+        raise ValueError(f"spec rank {len(spec)} != array rank {x.ndim}")
+    resolved = []
+    for dim, sym in zip(x.shape, spec):
+        ax = None
+        for cand in _resolve(mesh, sym):
+            if cand is None or dim % _axis_size(mesh, cand) == 0:
+                ax = cand
+                break
+        resolved.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*resolved))
+    )

@@ -1,0 +1,218 @@
+"""Sharding rules: params / inputs / caches -> PartitionSpec pytrees.
+
+Policy (DESIGN.md §2.5/§2.6):
+  * batch shards over ("pod","data")
+  * weight "feature/output" dims shard over "model" (tensor parallel);
+    the other big dim shards over "data" (FSDP) — standard 2-D sharding,
+    required for the >=70B configs to fit 16 GB/chip.
+  * MoE expert stacks shard E over "model" (expert parallelism) and d_model
+    over "data".
+  * every rule is guarded by divisibility — non-divisible dims fall back to
+    the next candidate axis or replicate (e.g. qwen1.5's 20 heads, kv_heads
+    < 16, mamba2's 50280 vocab handled by padding at the embedding).
+
+All decisions are *name/shape-based* over the param pytree, so they apply
+uniformly to the stacked per-segment leaves (leading layer axis -> None).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(mesh: Mesh, dim: int, axes) -> bool:
+    return dim % _axis_size(mesh, axes) == 0
+
+
+def _spec2d(mesh: Mesh, rows: int, cols: int, row_ax, col_ax):
+    """Shard a (rows, cols) matrix on (row_ax, col_ax) with divisibility
+    fallbacks (drop an axis rather than produce an invalid sharding)."""
+    r = row_ax if (row_ax and _fits(mesh, rows, row_ax)) else None
+    c = col_ax if (col_ax and _fits(mesh, cols, col_ax)) else None
+    return r, c
+
+
+def param_pspecs(cfg: ModelConfig, params_shapes: Any, mesh: Mesh,
+                 *, fsdp: bool = True):
+    """PartitionSpec pytree matching ``params_shapes`` (ShapeDtypeStructs)."""
+    daxes = batch_axes(mesh)
+    fax = daxes if (fsdp and daxes) else None       # FSDP axis group
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+
+    def rule(path: str, shape: Tuple[int, ...]) -> P:
+        # stacked layer axis? (hybrid periods stack twice: (n_periods, k, ...))
+        lead: Tuple[Optional[Any], ...] = ()
+        core = shape
+        if "segments" in path or "encoder" in path or "decoder" in path or "'layer'" in path:
+            lead, core = (None,), shape[1:]
+            if "'sub'" in path:
+                lead, core = (None, None), shape[2:]
+        if not core:
+            return P(*lead) if lead else P()
+
+        name = path
+
+        if "moe" in name and any(k in name for k in ("w_gate", "w_up", "w_down")) \
+                and "shared" not in name and len(core) == 3:
+            # expert stack (E, din, dout): E -> model (expert parallel),
+            # din -> fsdp over data. moe_forward explicitly re-gathers the
+            # fsdp shards before the expert einsum so the contraction is
+            # conflict-free with the capacity dim (which shards over data).
+            e, din, dout = core
+            eax = "model" if _fits(mesh, e, "model") else None
+            dax = fax if _fits(mesh, din, fax) else None
+            return P(*lead, eax, dax, None)
+
+        if "embed" in name and len(core) == 2:       # (V, D)
+            r, c = _spec2d(mesh, core[0], core[1], "model", fax)
+            return P(*lead, r, c)
+
+        if "lm_head" in name and len(core) == 2:     # (D, V)
+            r, c = _spec2d(mesh, core[0], core[1], fax, "model")
+            return P(*lead, r, c)
+
+        if "router" in name:
+            return P(*lead, *(None,) * len(core))
+
+        if len(core) == 2:
+            rows, cols = core
+            # contraction-side vs output-side heuristic: shard the larger
+            # "feature" dim on model, the d_model dim on fsdp.
+            if any(k in name for k in ("w_down", "wo", "out_proj")):
+                r, c = _spec2d(mesh, rows, cols, "model", fax)
+            else:
+                r, c = _spec2d(mesh, rows, cols, fax, "model")
+            return P(*lead, r, c)
+
+        if len(core) == 1:
+            d = core[0]
+            if any(k in name for k in ("scale", "bias_ln")) or "norm" in name:
+                return P(*lead, None)
+            # projection biases / per-head vectors: model if divisible
+            ax = "model" if _fits(mesh, d, "model") else None
+            return P(*lead, ax)
+
+        # conv weights (W, conv_dim) handled by 2D rule above; fallback:
+        return P(*lead, *(None,) * len(core))
+
+    specs = [rule(jax.tree_util.keystr(p), v.shape) for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_pspecs(cfg: ModelConfig, opt_state_shapes: Any, param_specs: Any,
+                     mesh: Mesh):
+    """Optimizer state mirrors param sharding; factored accumulators and
+    scalars replicate along the reduced dim."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_state_shapes)
+    # build a path->spec map from params (m/v mirror params exactly by shape)
+    pflat, _ = jax.tree_util.tree_flatten_with_path(param_specs)
+
+    # match by stripped path suffix: opt paths look like ['m']['segments'][0]...
+    def find_spec(path_str: str, shape) -> P:
+        for pp, spec in pflat:
+            if jax.tree_util.keystr(pp) in path_str and len(spec) == len(shape):
+                return spec
+        # adafactor vr/vc or scalars: replicate (cheap, O(rows+cols))
+        return P(*(None,) * len(shape))
+
+    specs = [find_spec(jax.tree_util.keystr(p), v.shape) for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# inputs / caches
+# ---------------------------------------------------------------------------
+
+def input_pspecs(cfg: ModelConfig, inputs_shapes: Any, mesh: Mesh):
+    """Token/label/embedding inputs: batch over ("pod","data") when it
+    divides, else replicate (long_500k has batch 1)."""
+    daxes = batch_axes(mesh)
+
+    def rule(path, leaf):
+        b = leaf.shape[0] if leaf.shape else 1
+        bax = daxes if (daxes and b % _axis_size(mesh, daxes) == 0) else None
+        rest = (None,) * (len(leaf.shape) - 1)
+        return P(bax, *rest)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(inputs_shapes)
+    return jax.tree_util.tree_unflatten(treedef, [rule(p, v) for p, v in flat])
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shapes: Any, mesh: Mesh):
+    """KV/SSM cache sharding for decode.
+
+    Leaves are stacked (L_seg, B, S, H, D) / (L_seg, B, S, C) / SSM states
+    (L_seg, B, H, P, N) / conv (L_seg, B, W, Cd). Preference order:
+    batch -> data; heads/state-channels -> model; else seq -> model/data;
+    else replicate.
+    """
+    daxes = batch_axes(mesh)
+
+    def rule(path, leaf):
+        name = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        lead = (None,)                     # stacked layer dim
+        core = shape[1:]
+        if "memory" in name:               # enc-dec memory (B, S_enc, D)
+            lead, core = (), shape
+        # hybrid-period ssm cache stacks twice: (n_periods, k, B, ...)
+        if ("conv" in name and len(shape) == 5) or ("ssd" in name and len(shape) == 6):
+            lead, core = (None, None), shape[2:]
+        spec: list = [None] * len(core)
+        # batch dim is core[0]
+        if core and core[0] % _axis_size(mesh, daxes) == 0 and _axis_size(mesh, daxes) > 1:
+            spec[0] = daxes
+            batch_sharded = True
+        else:
+            batch_sharded = False
+
+        if "conv" in name and len(core) == 3:          # (B, W-1, conv_dim)
+            if core[2] % _axis_size(mesh, "model") == 0:
+                spec[2] = "model"
+        elif "ssd" in name and len(core) == 4:          # (B, H, P, N)
+            if core[1] % _axis_size(mesh, "model") == 0:
+                spec[1] = "model"
+        elif ("'k'" in name or "'v'" in name) and len(core) == 4:  # (B, S, Hk, dh)
+            if core[2] % _axis_size(mesh, "model") == 0:
+                spec[2] = "model"
+                if not batch_sharded and core[1] % _axis_size(mesh, daxes) == 0:
+                    spec[1] = daxes
+            else:
+                # heads indivisible: shard seq as finely as possible
+                full = (tuple(daxes) + ("model",)) if (daxes and not batch_sharded) else ("model",)
+                if core[1] % _axis_size(mesh, full) == 0:
+                    spec[1] = full
+                elif core[1] % _axis_size(mesh, "model") == 0:
+                    spec[1] = "model"
+        elif ("latent" in name or "k_rope" in name) and len(core) == 3:  # (B, S, C)
+            full = (tuple(daxes) + ("model",)) if (daxes and not batch_sharded) else ("model",)
+            if core[1] % _axis_size(mesh, full) == 0:
+                spec[1] = full
+            elif core[1] % _axis_size(mesh, "model") == 0:
+                spec[1] = "model"
+        elif "memory" in name and len(core) == 3:       # (B, S_enc, D)
+            pass
+        return P(*lead, *spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(treedef, [rule(p, v) for p, v in flat])

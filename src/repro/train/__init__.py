@@ -1,0 +1,10 @@
+from repro.train.metrics import accuracy, auprc, glm_eval_fn, log_loss  # noqa: F401
+from repro.train.state import make_train_state, train_state_shapes  # noqa: F401
+from repro.train.train_step import (  # noqa: F401
+    IGNORE,
+    cross_entropy,
+    make_loss_fn,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)

@@ -1,0 +1,50 @@
+"""Evaluation metrics. AUPRC (area under the Precision-Recall curve) is the
+paper's Figure-1 metric; implemented as average precision over the ranked
+scores (no sklearn in this environment)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def auprc(scores, labels) -> float:
+    """Average precision. labels in {-1,+1} (or {0,1}); scores any real."""
+    s = np.asarray(scores, np.float64)
+    y = np.asarray(labels)
+    y = (y > 0).astype(np.float64)
+    order = np.argsort(-s, kind="stable")
+    y = y[order]
+    tp = np.cumsum(y)
+    k = np.arange(1, len(y) + 1)
+    precision = tp / k
+    n_pos = y.sum()
+    if n_pos == 0:
+        return 0.0
+    # AP = mean of precision at each positive
+    return float((precision * y).sum() / n_pos)
+
+
+def accuracy(scores, labels) -> float:
+    s = np.asarray(scores)
+    y = np.asarray(labels) > 0
+    return float(((s > 0) == y).mean())
+
+
+def log_loss(scores, labels) -> float:
+    m = jnp.asarray(scores)
+    y = jnp.where(jnp.asarray(labels) > 0, 1.0, -1.0)
+    return float(jnp.mean(jnp.logaddexp(0.0, -y * m)))
+
+
+def glm_eval_fn(X_test, y_test):
+    """eval_fn for regularization_path: test AUPRC + accuracy."""
+
+    def fn(beta):
+        scores = X_test @ beta
+        return {
+            "auprc": auprc(scores, y_test),
+            "accuracy": accuracy(scores, y_test),
+            "logloss": log_loss(scores, y_test),
+        }
+
+    return fn

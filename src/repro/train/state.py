@@ -1,0 +1,26 @@
+"""Training state container + constructors."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import init_params
+from repro.optim import make_optimizer
+
+
+def make_train_state(key, cfg: ModelConfig):
+    params = init_params(key, cfg)
+    opt = make_optimizer(cfg.optimizer)
+    return {
+        "params": params,
+        "opt": opt.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def train_state_shapes(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the full train state (no allocation)."""
+    return jax.eval_shape(lambda k: make_train_state(k, cfg), jax.random.key(0))

@@ -1,0 +1,47 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — tests see 1 device;
+distributed tests spawn subprocesses with fake-device env (see
+tests/test_distributed.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import GLMConfig
+from repro.data.synthetic import make_glm_dataset
+
+
+@pytest.fixture(scope="session")
+def small_glm():
+    """~2.5k x 128 dense synthetic logistic problem + lambda grid."""
+    cfg = GLMConfig(name="test", num_examples=2560, num_features=128, density=1.0)
+    ds = make_glm_dataset(cfg, jax.random.key(0))
+    return ds
+
+
+@pytest.fixture(scope="session")
+def sparse_glm():
+    cfg = GLMConfig(name="test-sparse", num_examples=2048, num_features=256,
+                    density=0.1)
+    return make_glm_dataset(cfg, jax.random.key(1))
+
+
+@pytest.fixture(scope="session")
+def glm_opt():
+    """Reference optimum via long proximal-gradient run (oracle)."""
+
+    def solve(X, y, lam, iters=6000):
+        L = 0.25 * jnp.linalg.norm(X, ord=2) ** 2
+        lr = float(1.0 / L)
+        beta = jnp.zeros(X.shape[1])
+
+        @jax.jit
+        def step(beta):
+            m = X @ beta
+            g = X.T @ (jax.nn.sigmoid(m) - (y + 1) * 0.5)
+            b = beta - lr * g
+            return jnp.sign(b) * jnp.maximum(jnp.abs(b) - lr * lam, 0.0)
+
+        for _ in range(iters):
+            beta = step(beta)
+        return beta
+
+    return solve

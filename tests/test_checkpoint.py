@@ -1,0 +1,42 @@
+"""Checkpointer round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import MODEL_CONFIGS
+from repro.train import make_train_state
+
+
+def test_round_trip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2, 2), jnp.bfloat16), "c": jnp.int32(7)},
+        "list": [jnp.zeros(3), jnp.ones(2)],
+    }
+    save_pytree(tree, str(tmp_path / "ck"), step=42)
+    out = load_pytree(str(tmp_path / "ck"), tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_train_state_round_trip(tmp_path):
+    cfg = MODEL_CONFIGS["tinyllama-1.1b"].smoke()
+    state = make_train_state(jax.random.key(0), cfg)
+    save_pytree(state, str(tmp_path / "state"))
+    restored = load_pytree(str(tmp_path / "state"), state)
+    a = jax.tree.leaves(state["params"])[0]
+    b = jax.tree.leaves(restored["params"])[0]
+    np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.zeros((2, 2))}
+    save_pytree(tree, str(tmp_path / "ck"))
+    bad = {"a": jnp.zeros((3, 3))}
+    try:
+        load_pytree(str(tmp_path / "ck"), bad)
+        raise AssertionError("expected ValueError")
+    except ValueError:
+        pass

@@ -1,0 +1,114 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import gram_cd, logistic_stats
+from repro.kernels.ref import gram_cd_ref, logistic_stats_ref
+
+
+@pytest.mark.parametrize("f", [8, 32, 128, 256, 512])
+@pytest.mark.parametrize("lam", [0.0, 0.3, 10.0])
+def test_gram_cd_sweep(f, lam):
+    key = jax.random.key(f * 1000 + int(lam * 10))
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    A = jax.random.normal(k1, (2 * f, f))
+    G = A.T @ A / f
+    c = 3.0 * jax.random.normal(k2, (f,))
+    beta = 0.5 * jax.random.normal(k3, (f,))
+    db0 = 0.1 * jax.random.normal(k4, (f,))
+    d_kernel = gram_cd(G, c, beta, db0, lam)
+    d_ref = gram_cd_ref(G, c, beta, db0, lam, 1e-6)
+    np.testing.assert_allclose(d_kernel, d_ref, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_cd_dtypes(dtype):
+    key = jax.random.key(7)
+    k1, k2 = jax.random.split(key)
+    f = 64
+    A = jax.random.normal(k1, (2 * f, f), dtype)
+    G = (A.T @ A / f)
+    c = jax.random.normal(k2, (f,), dtype)
+    beta = jnp.zeros(f, dtype)
+    db0 = jnp.zeros(f, dtype)
+    d_kernel = gram_cd(G, c, beta, db0, 0.1)
+    d_ref = gram_cd_ref(G, c, beta, db0, 0.1, 1e-6)
+    np.testing.assert_allclose(
+        np.asarray(d_kernel, np.float32), np.asarray(d_ref, np.float32),
+        atol=5e-2 if dtype == jnp.bfloat16 else 1e-5, rtol=1e-2)
+
+
+def test_gram_cd_soft_threshold_zeroing():
+    """Huge lambda -> every coordinate driven to -(beta+dbeta0) (exact zero
+    of the total coefficient)."""
+    f = 32
+    G = jnp.eye(f)
+    c = jnp.zeros(f)
+    beta = jnp.linspace(-1, 1, f)
+    db0 = jnp.zeros(f)
+    d = gram_cd(G, c, beta, db0, 1e6)
+    np.testing.assert_allclose(beta + db0 + d, np.zeros(f), atol=1e-6)
+
+
+@pytest.mark.parametrize("n,block", [(64, 32), (1000, 256), (8192, 1024),
+                                     (5000, 4096)])
+def test_logistic_stats_sweep(n, block):
+    key = jax.random.key(n)
+    k1, k2 = jax.random.split(key)
+    m = 4.0 * jax.random.normal(k1, (n,))
+    y = jnp.sign(jax.random.normal(k2, (n,)))
+    w1, z1, nll1 = logistic_stats(m, y, block=block)
+    w2, z2, nll2 = logistic_stats_ref(m, y)
+    np.testing.assert_allclose(w1, w2, rtol=1e-6)
+    np.testing.assert_allclose(z1, z2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(nll1, nll2, rtol=1e-5)
+
+
+def test_logistic_stats_extreme_margins():
+    """Clamps keep w/z finite at |m| up to 80 (exp overflow territory)."""
+    m = jnp.array([-80.0, -10.0, 0.0, 10.0, 80.0])
+    y = jnp.array([1.0, -1.0, 1.0, 1.0, -1.0])
+    w, z, nll = logistic_stats(m, y, block=8)
+    assert np.isfinite(np.asarray(w)).all()
+    assert np.isfinite(np.asarray(z)).all()
+    assert np.isfinite(float(nll))
+
+
+@pytest.mark.parametrize("shape,blocks", [
+    ((1, 256, 2, 64), (128, 128)),
+    ((2, 512, 4, 32), (128, 64)),
+    ((1, 128, 1, 128), (64, 128)),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(shape, blocks, causal):
+    from repro.kernels.ops import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+
+    b, s, h, d = shape
+    bq, bk = blocks
+    key = jax.random.key(b * s + d)
+    q = jax.random.normal(key, shape)
+    k = jax.random.normal(jax.random.fold_in(key, 1), shape)
+    v = jax.random.normal(jax.random.fold_in(key, 2), shape)
+    o1 = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    o2 = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(o1, o2, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    from repro.kernels.ops import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+
+    key = jax.random.key(11)
+    shape = (1, 256, 2, 64)
+    q = jax.random.normal(key, shape, dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), shape, dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), shape, dtype)
+    o1 = flash_attention(q, k, v, block_q=128, block_k=128)
+    o2 = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(o1, np.float32), np.asarray(o2, np.float32),
+        atol=3e-2 if dtype == jnp.bfloat16 else 2e-5)

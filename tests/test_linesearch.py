@@ -1,0 +1,59 @@
+"""Line-search (paper Algorithm 3) behaviour."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import line_search, margins, objective, working_stats
+from repro.core.dglmnet import DGLMNETOptions, dglmnet_iteration
+from repro.core.linesearch import f_alpha, golden_section
+
+
+def _setup(small_glm, lam_div=16):
+    X, y = small_glm.X_train, small_glm.y_train
+    from repro.core import lambda_max
+
+    lam = float(lambda_max(X, y)) / lam_div
+    beta = jnp.zeros(X.shape[1])
+    m = margins(X, beta)
+    dbeta, dm, grad_dot = dglmnet_iteration(
+        X, y, beta, m, lam, DGLMNETOptions(num_blocks=4))
+    return X, y, lam, beta, m, dbeta, dm, grad_dot
+
+
+def test_alpha_in_unit_interval(small_glm):
+    X, y, lam, beta, m, dbeta, dm, grad_dot = _setup(small_glm)
+    res = line_search(m, dm, y, beta, dbeta, lam, grad_dot)
+    a = float(res.alpha)
+    assert 0.0 < a <= 1.0
+
+
+def test_armijo_sufficient_decrease(small_glm):
+    X, y, lam, beta, m, dbeta, dm, grad_dot = _setup(small_glm)
+    res = line_search(m, dm, y, beta, dbeta, lam, grad_dot)
+    f0 = float(f_alpha(0.0, m, dm, y, beta, dbeta, lam))
+    assert float(res.f_new) < f0  # strict improvement
+
+
+def test_fnew_matches_objective(small_glm):
+    X, y, lam, beta, m, dbeta, dm, grad_dot = _setup(small_glm)
+    res = line_search(m, dm, y, beta, dbeta, lam, grad_dot)
+    beta2 = beta + res.alpha * dbeta
+    f_direct = float(objective(margins(X, beta2), y, beta2, lam))
+    assert abs(f_direct - float(res.f_new)) / abs(f_direct) < 1e-4
+
+
+def test_golden_section_quadratic():
+    fun = lambda a: (a - 0.37) ** 2
+    xmin = float(golden_section(fun, jnp.float32(0.0), jnp.float32(1.0)))
+    assert abs(xmin - 0.37) < 1e-3
+
+
+def test_unit_step_preserves_exact_zeros(small_glm):
+    """Sparsity safeguard: when the unit step is accepted, coordinates with
+    dbeta_j = -beta_j land exactly on zero."""
+    X, y, lam, beta, m, dbeta, dm, grad_dot = _setup(small_glm, lam_div=4)
+    res = line_search(m, dm, y, beta, dbeta, lam, grad_dot)
+    if bool(res.took_unit_step):
+        new_beta = beta + res.alpha * dbeta
+        # coordinates the CD solver zeroed stay exactly zero
+        zeroed = jnp.abs(beta + dbeta) < 1e-12
+        assert bool(jnp.all(new_beta[zeroed] == 0.0))

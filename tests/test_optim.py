@@ -1,0 +1,56 @@
+"""Optimizer substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adafactor, adamw, clip_by_global_norm, sgd, warmup_cosine
+from repro.optim.optimizers import apply_updates
+
+
+@pytest.mark.parametrize("make", [
+    lambda: sgd(momentum=0.9),
+    lambda: adamw(weight_decay=0.0),
+    lambda: adafactor(),
+])
+def test_optimizer_decreases_quadratic(make):
+    opt = make()
+    params = {"w": jnp.array([[3.0, -2.0], [1.5, 4.0]]), "b": jnp.array([1.0, -1.0])}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params, jnp.float32(0.05))
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor()
+    params = {"w": jnp.zeros((64, 32))}
+    state = opt.init(params)
+    acc = state["acc"]["w"]
+    assert acc["vr"].shape == (64,)
+    assert acc["vc"].shape == (32,)
+    # O(rows+cols), not O(rows*cols)
+    assert acc["vr"].size + acc["vc"].size < 64 * 32 // 4
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 1.0
+    total = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+
+
+def test_warmup_cosine_shape():
+    s = warmup_cosine(1.0, 10, 100)
+    assert float(s(0)) == 0.0
+    np.testing.assert_allclose(float(s(10)), 1.0, rtol=1e-5)
+    assert float(s(100)) < 0.2
+    assert float(s(5)) == pytest.approx(0.5, rel=1e-5)

@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import soft_threshold, working_stats
+from repro.core.linesearch import f_alpha
+from repro.core.objective import P_EPS, W_MIN, neg_log_likelihood
+
+# ranges bounded to keep float32 rounding away from the exact-arithmetic
+# assertions (at |x| ~ 1e6, eps(f32) > typical thresholds)
+finite_f = st.floats(-1e4, 1e4, allow_nan=False, allow_infinity=False)
+
+
+@given(x=finite_f, a=st.floats(0, 1e4, allow_nan=False))
+@settings(deadline=None)
+def test_soft_threshold_properties(x, a):
+    t = float(soft_threshold(jnp.float32(x), jnp.float32(a)))
+    # shrinkage: |T(x,a)| <= |x|, and exact zero inside the threshold
+    assert abs(t) <= abs(x) * (1 + 1e-6) + 1e-3
+    xf, af = float(jnp.float32(x)), float(jnp.float32(a))
+    if abs(xf) <= af:
+        assert t == 0.0
+    else:
+        # sign preserved, magnitude reduced by exactly a (within fp)
+        assert np.sign(t) == np.sign(xf)
+        np.testing.assert_allclose(abs(t), abs(xf) - af, rtol=1e-4, atol=1e-3)
+
+
+@given(m=st.lists(st.floats(-50, 50), min_size=1, max_size=64),
+       signs=st.lists(st.booleans(), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_working_stats_bounds(m, signs):
+    n = min(len(m), len(signs))
+    mm = jnp.asarray(m[:n], jnp.float32)
+    yy = jnp.where(jnp.asarray(signs[:n]), 1.0, -1.0)
+    w, z = working_stats(mm, yy)
+    w_np = np.asarray(w)
+    # 0 < w <= 1/4 (+clamp floor)
+    assert (w_np >= W_MIN - 1e-9).all()
+    assert (w_np <= 0.25 + 1e-6).all()
+    # z is finite thanks to the probability clamp
+    assert np.isfinite(np.asarray(z)).all()
+    # w*z = ytilde - p  (the classic identity)
+    p = np.clip(jax.nn.sigmoid(mm), P_EPS, 1 - P_EPS)
+    np.testing.assert_allclose(
+        w_np * np.asarray(z), np.asarray((yy + 1) / 2 - p), atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_objective_convex_along_direction(seed):
+    """f(alpha) = NLL(m + a dm) + lam|beta + a dbeta|_1 is convex on [0,1]:
+    midpoint below chord."""
+    key = jax.random.key(seed)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    n, p = 64, 16
+    m = jax.random.normal(k1, (n,))
+    dm = jax.random.normal(k2, (n,))
+    y = jnp.sign(jax.random.normal(k3, (n,)))
+    beta = jax.random.normal(k4, (p,))
+    dbeta = jax.random.normal(k5, (p,))
+    lam = 0.5
+    f0 = float(f_alpha(0.0, m, dm, y, beta, dbeta, lam))
+    f1 = float(f_alpha(1.0, m, dm, y, beta, dbeta, lam))
+    fm = float(f_alpha(0.5, m, dm, y, beta, dbeta, lam))
+    assert fm <= 0.5 * (f0 + f1) + 1e-3 * (abs(f0) + abs(f1))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_nll_nonnegative_and_margin_monotone(seed):
+    key = jax.random.key(seed)
+    m = jax.random.normal(key, (32,)) * 3
+    y = jnp.sign(m) * jnp.where(jax.random.uniform(jax.random.fold_in(key, 1), (32,)) < 0.8, 1.0, -1.0)
+    nll = float(neg_log_likelihood(m, y))
+    assert nll >= 0.0
+    # scaling margins toward correct labels cannot increase NLL
+    nll2 = float(neg_log_likelihood(m + 0.1 * y, y))
+    assert nll2 <= nll + 1e-5
+
+
+@given(f=st.sampled_from([8, 16, 64]), seed=st.integers(0, 1000),
+       lam=st.floats(0.0, 5.0))
+@settings(max_examples=25, deadline=None)
+def test_gram_cd_decreases_quadratic_objective(f, seed, lam):
+    """One CD cycle never increases the penalized quadratic model."""
+    from repro.core.subproblem import cd_cycle_gram_tile
+
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    A = jax.random.normal(k1, (2 * f, f))
+    G = A.T @ A / f + 1e-3 * jnp.eye(f)
+    c = jax.random.normal(k2, (f,)) * 2
+    beta = jax.random.normal(k3, (f,)) * 0.3
+    d = cd_cycle_gram_tile(G, c, beta, jnp.zeros(f), lam, 1e-6)
+
+    def qobj(dd):
+        return float(0.5 * dd @ G @ dd - c @ dd + lam * jnp.sum(jnp.abs(beta + dd)))
+
+    assert qobj(d) <= qobj(jnp.zeros(f)) + 1e-4

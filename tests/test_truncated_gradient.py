@@ -1,0 +1,37 @@
+"""Baseline (distributed online learning via truncated gradient) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TGOptions, lambda_max, margins, objective, truncated_gradient_fit
+
+
+def test_tg_learns(small_glm):
+    X, y = small_glm.X_train, small_glm.y_train
+    lam = float(lambda_max(X, y)) / 64
+    snaps = truncated_gradient_fit(
+        X, y, lam, opts=TGOptions(num_machines=8, passes=8, learning_rate=0.1,
+                                  decay=0.5),
+        key=jax.random.key(0))
+    beta0 = jnp.zeros(X.shape[1])
+    f0 = float(objective(margins(X, beta0), y, beta0, lam))
+    f_end = float(objective(margins(X, snaps[-1][1]), y, snaps[-1][1], lam))
+    assert f_end < f0, (f_end, f0)
+
+
+def test_tg_sparsity_increases_with_lambda(small_glm):
+    X, y = small_glm.X_train, small_glm.y_train
+    lmax = float(lambda_max(X, y))
+    nnz = []
+    for lam in (lmax / 4, lmax / 64):
+        snaps = truncated_gradient_fit(
+            X, y, lam, opts=TGOptions(num_machines=4, passes=5), key=jax.random.key(1))
+        nnz.append(int((jnp.abs(snaps[-1][1]) > 1e-8).sum()))
+    assert nnz[0] <= nnz[1]
+
+
+def test_tg_snapshots_every_pass(small_glm):
+    X, y = small_glm.X_train, small_glm.y_train
+    snaps = truncated_gradient_fit(
+        X, y, 1.0, opts=TGOptions(num_machines=4, passes=3), key=jax.random.key(2))
+    assert [s[0] for s in snaps] == [1, 2, 3]
