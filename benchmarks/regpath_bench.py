@@ -1,0 +1,122 @@
+"""Regularization-path timing: seed-style host loop vs the device-resident
+screened engine. Emits ``BENCH_regpath.json``.
+
+Two drivers over the identical warm-started lambda grid (Algorithm 5):
+
+* **seed-style** — the seed's Python outer loop (`fit_python_loop`): one
+  objective sync per outer iteration, full-p subproblems at every lambda.
+* **engine** — `regularization_path(screen=True)`: jitted while_loop solves
+  (core/engine.py) restricted to the strong-rule/KKT active set
+  (core/screening.py), capacity-bucketed so the whole path reuses a
+  handful of compilations.
+
+Both sides are run once to compile (cold) and once compiled (warm); the
+headline comparison — and the CI gate — is warm wall-clock, which is what
+repeated production paths pay.
+
+    PYTHONPATH=src python -m benchmarks.regpath_bench            # paper-ish shape
+    PYTHONPATH=src python -m benchmarks.regpath_bench --tiny     # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GLMConfig
+from repro.core import DGLMNETOptions, fit_python_loop, lambda_max, regularization_path
+from repro.data.synthetic import make_glm_dataset
+
+
+def seed_style_path(X, y, path_len: int, opts: DGLMNETOptions):
+    """The seed's path driver: warm-started loop of host-driven fits."""
+    lmax = float(lambda_max(X, y))
+    beta = None
+    rows = []
+    for i in range(1, path_len + 1):
+        lam = lmax * 2.0 ** (-i)
+        res = fit_python_loop(X, y, lam, beta0=beta, opts=opts)
+        beta = res.beta
+        rows.append({"lam": lam, "nnz": res.nnz, "f": res.f,
+                     "n_iters": res.n_iters})
+    return rows
+
+
+def engine_path(X, y, path_len: int, opts: DGLMNETOptions):
+    pts = regularization_path(X, y, path_len=path_len, opts=opts, screen=True)
+    return [{"lam": p.lam, "nnz": p.nnz, "f": p.f, "n_iters": p.n_iters,
+             **{f"screen_{k}": v for k, v in p.screen.items()}} for p in pts]
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
+        density: float = 0.2, k_true: int = 64,
+        out_path: str = "BENCH_regpath.json") -> dict:
+    # sparse ground truth (k_true << p): the large-p regime screening is
+    # for — most features never activate anywhere on the path
+    cfg = GLMConfig(name="regpath-bench", num_examples=int(n / 0.8),
+                    num_features=p, density=density)
+    ds = make_glm_dataset(cfg, jax.random.key(0), k_true=k_true)
+    X, y = ds.X_train, ds.y_train
+    opts = DGLMNETOptions(num_blocks=8, tile=128, max_iters=40)
+    print(f"# regpath bench: n={X.shape[0]} p={X.shape[1]} "
+          f"path_len={path_len} density={density}")
+
+    seed_rows, seed_cold = _timed(lambda: seed_style_path(X, y, path_len, opts))
+    _, seed_warm = _timed(lambda: seed_style_path(X, y, path_len, opts))
+    eng_rows, eng_cold = _timed(lambda: engine_path(X, y, path_len, opts))
+    _, eng_warm = _timed(lambda: engine_path(X, y, path_len, opts))
+
+    report = {
+        "config": {"n": int(X.shape[0]), "p": int(X.shape[1]),
+                   "path_len": path_len, "density": density, "k_true": k_true,
+                   "opts": {"num_blocks": opts.num_blocks, "tile": opts.tile,
+                            "max_iters": opts.max_iters}},
+        "seed_style": {"cold_s": seed_cold, "warm_s": seed_warm,
+                       "per_lambda": seed_rows},
+        "engine": {"cold_s": eng_cold, "warm_s": eng_warm,
+                   "per_lambda": eng_rows},
+        "speedup_warm": seed_warm / max(eng_warm, 1e-12),
+        "speedup_cold": seed_cold / max(eng_cold, 1e-12),
+        "engine_strictly_faster": eng_warm < seed_warm,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"# seed-style: cold {seed_cold:.2f}s warm {seed_warm:.2f}s")
+    print(f"# engine:     cold {eng_cold:.2f}s warm {eng_warm:.2f}s")
+    print(f"# warm speedup {report['speedup_warm']:.2f}x "
+          f"(strictly faster: {report['engine_strictly_faster']})")
+    print(f"# wrote {out_path}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shapes (seconds, not minutes)")
+    ap.add_argument("--out", default="BENCH_regpath.json")
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--p", type=int, default=4096)
+    ap.add_argument("--path-len", type=int, default=20)
+    ap.add_argument("--density", type=float, default=0.2)
+    args = ap.parse_args()
+    if args.tiny:
+        args.n, args.p, args.path_len = 512, 256, 6
+    report = run(n=args.n, p=args.p, path_len=args.path_len,
+                 density=args.density, out_path=args.out)
+    # Screening pays in proportion to p; tiny CI-smoke shapes sit below the
+    # break-even point, so the strictly-faster gate applies to real shapes.
+    if not args.tiny and not report["engine_strictly_faster"]:
+        raise SystemExit("FAIL: engine path not strictly faster than seed-style")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,8 @@
 """Benchmark harness: one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV rows (plus commented context lines).
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig1|table2|table3|kernels]
+    PYTHONPATH=src python -m benchmarks.run \
+        [--only fig1|table2|table3|kernels|ablation|regpath]
 """
 from __future__ import annotations
 
@@ -11,7 +12,8 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["fig1", "table2", "table3", "kernels", "ablation"])
+                    choices=["fig1", "table2", "table3", "kernels", "ablation",
+                             "regpath"])
     args = ap.parse_args()
 
     from benchmarks import fig1_quality_sparsity, kernels_bench, table2_datasets, table3_timing
@@ -29,6 +31,10 @@ def main() -> None:
         from benchmarks import ablation_parallel_cd
 
         ablation_parallel_cd.run()
+    if args.only == "regpath":    # opt-in: emits BENCH_regpath.json
+        from benchmarks import regpath_bench
+
+        regpath_bench.run()
 
 
 if __name__ == "__main__":

@@ -1,5 +1,12 @@
-from repro.core.dglmnet import DGLMNETOptions, FitResult, dglmnet_iteration, fit  # noqa: F401
+from repro.core.dglmnet import (  # noqa: F401
+    DGLMNETOptions,
+    FitResult,
+    dglmnet_iteration,
+    fit,
+    fit_python_loop,
+)
 from repro.core.distributed import fit_distributed, make_dglmnet_step  # noqa: F401
+from repro.core.engine import SolverState, make_solver, make_step  # noqa: F401
 from repro.core.linesearch import LineSearchResult, line_search  # noqa: F401
 from repro.core.objective import (  # noqa: F401
     lambda_max,
@@ -10,6 +17,10 @@ from repro.core.objective import (  # noqa: F401
     working_stats,
 )
 from repro.core.regpath import PathPoint, regularization_path  # noqa: F401
+from repro.core.screening import (  # noqa: F401
+    kkt_violations,
+    strong_rule_mask,
+)
 from repro.core.subproblem import (  # noqa: F401
     cd_cycle_gram,
     cd_cycle_gram_tile,

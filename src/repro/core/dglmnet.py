@@ -6,19 +6,23 @@ distributed version (core/distributed.py), which maps blocks onto the
 The public entry points:
 
 * ``dglmnet_iteration`` — one jitted outer iteration (subproblems + combine).
-* ``fit`` — Python-level outer loop with the paper's convergence criterion,
-  including both sparsity safeguards (unit-step short-circuit inside the
-  line search; alpha snap-back to 1 at termination).
+* ``fit`` — the device-resident outer loop: a single jitted
+  ``lax.while_loop`` program built by ``core.engine.make_solver``; no
+  per-iteration host synchronization (one ``device_get`` per solve).
+* ``fit_python_loop`` — the seed's host-driven loop, kept as the reference
+  oracle for the engine's trajectory tests and the path benchmark's
+  "seed-style" baseline.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
+from functools import lru_cache, partial
 from typing import List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 from repro.core.linesearch import f_alpha, line_search
 from repro.core.objective import (
     l1_norm,
@@ -73,12 +77,13 @@ def _pad_features(X, beta, num_blocks):
     return X, beta, p
 
 
-@partial(jax.jit, static_argnames=("opts",))
-def dglmnet_iteration(X, y, beta, m, lam, opts: DGLMNETOptions):
+def _iteration(X, y, beta, m, lam, opts: DGLMNETOptions):
     """One outer iteration: block subproblems -> combined (dbeta, dm).
 
     Blocks are solved with vmap — numerically identical to M machines
     solving independently (block-diagonal Hessian, paper eq. (9)).
+    Un-jitted body: jitted standalone as ``dglmnet_iteration`` and traced
+    into the engine's while_loop by ``fit``.
     """
     w, z = working_stats(m, y)
     Xp, betap, p = _pad_features(X, beta, opts.num_blocks)
@@ -106,6 +111,25 @@ def dglmnet_iteration(X, y, beta, m, lam, opts: DGLMNETOptions):
     return dbeta, dm, grad_dot
 
 
+dglmnet_iteration = jax.jit(_iteration, static_argnames=("opts",))
+
+
+@lru_cache(maxsize=None)
+def _solver_for(opts: DGLMNETOptions):
+    """One compiled while_loop program per options bundle (lam is traced,
+    so a whole regularization path reuses a single compilation)."""
+
+    def iteration(X, y, beta, m, lam):
+        return _iteration(X, y, beta, m, lam, opts)
+
+    return engine.make_solver(
+        iteration,
+        max_iters=opts.max_iters,
+        rel_tol=opts.rel_tol,
+        snap_tol=opts.snap_tol,
+    )
+
+
 def fit(
     X,
     y,
@@ -115,8 +139,43 @@ def fit(
     opts: DGLMNETOptions = DGLMNETOptions(),
     verbose: bool = False,
 ) -> FitResult:
-    """Paper Algorithm 1 with the Algorithm 3 line search and the paper's
-    convergence criterion + sparsity snap-back."""
+    """Paper Algorithm 1 with the Algorithm 3 line search, the paper's
+    convergence criterion and sparsity snap-back — run entirely on device
+    as one jitted while_loop (see core/engine.py)."""
+    n, p = X.shape
+    beta = jnp.zeros(p, jnp.float32) if beta0 is None else beta0.astype(jnp.float32)
+    m = margins(X, beta)
+
+    state = _solver_for(opts)(X, y, beta, m, lam)
+    host, hist, alphas = engine.fetch(state)       # the one d2h transfer
+    it = int(host.it)
+    if verbose:
+        for k in range(1, it + 1):
+            print(f"  iter {k:3d}  f={hist[k]:.6f}  alpha={alphas[k - 1]:.4f}")
+
+    return FitResult(
+        beta=state.beta,
+        f=hist[-1],
+        n_iters=it,
+        objective_history=hist,
+        alpha_history=alphas,
+        unit_step_frac=int(host.unit_steps) / max(it, 1),
+        converged=bool(host.converged),
+    )
+
+
+def fit_python_loop(
+    X,
+    y,
+    lam: float,
+    *,
+    beta0: Optional[jnp.ndarray] = None,
+    opts: DGLMNETOptions = DGLMNETOptions(),
+    verbose: bool = False,
+) -> FitResult:
+    """The seed's host-driven outer loop (one objective sync per
+    iteration). Reference oracle for the engine; also the path benchmark's
+    "seed-style" baseline. Same math as ``fit``."""
     n, p = X.shape
     beta = jnp.zeros(p, jnp.float32) if beta0 is None else beta0.astype(jnp.float32)
     m = margins(X, beta)

@@ -14,19 +14,24 @@ dense matmul. ``dm = X @ dbeta`` is ``psum``-ed over `model` inside the map —
 this is the paper's MPI_AllReduce of (dbeta, dbeta^T x_i), with the same
 O(n + p) payload per device.
 
-The line search then operates on global (sharded) arrays under plain jit —
-XLA inserts the reductions; payload is again O(n + p).
+The outer loop is the shared device-resident engine (core/engine.py): the
+shard_map subproblem is plugged into the same jitted while_loop program the
+single-process ``fit`` uses, so ``fit_distributed`` performs no per-iteration
+host synchronization either — sharded state stays on the mesh until the one
+``device_get`` at the end of the solve.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import pcast_varying, shard_map
+from repro.core import engine
 from repro.core.dglmnet import DGLMNETOptions
 from repro.core.linesearch import f_alpha, line_search
 from repro.core.objective import margins, objective, working_stats
@@ -52,7 +57,7 @@ def local_subproblem(X_loc, w_loc, r, beta_loc, lam, *, tile: int, nu: float,
         # it so the scan carry type is stable (shard_map vma tracking). The
         # Pallas-kernel path runs with check_vma=False (interpret-mode scan
         # internals mix varying axes), where pcast is unavailable.
-        r = jax.lax.pcast(r, "model", to="varying")
+        r = pcast_varying(r, "model")
     if use_kernel:
         from repro.kernels.ops import gram_cd as tile_solver
     else:
@@ -104,7 +109,7 @@ def local_subproblem_sparse(row_idx, values, w_loc, r, beta_loc, lam, *,
     p_loc = row_idx.shape[0]
     assert p_loc % tile == 0, (p_loc, tile)
     nt = p_loc // tile
-    r = jax.lax.pcast(r, "model", to="varying")
+    r = pcast_varying(r, "model")
 
     def densify(idx):
         rows = jax.lax.dynamic_slice(row_idx, (idx * tile, 0), (tile, row_idx.shape[1]))
@@ -149,7 +154,7 @@ def make_dglmnet_step_sparse(mesh: Mesh, opts: DGLMNETOptions, *,
     dspec = P(daxes) if daxes else P()
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(model_axis, daxes, None), P(model_axis, daxes, None),
                   dspec, P(model_axis), dspec, P()),
@@ -164,29 +169,31 @@ def make_dglmnet_step_sparse(mesh: Mesh, opts: DGLMNETOptions, *,
         dm = jax.lax.psum(z - r, model_axis)
         return dbeta, dm
 
-    @jax.jit
-    def step(row_idx, values, y, beta, m, lam):
+    def iteration(data, y, beta, m, lam):
+        row_idx, values = data
         lam_arr = jnp.asarray(lam, jnp.float32)[None]
         dbeta, dm = subproblem_sharded(row_idx, values, y, beta, m, lam_arr)
         grad_dot = jnp.dot(jax.nn.sigmoid(m) - (y + 1.0) * 0.5, dm)
-        res = line_search(m, dm, y, beta, dbeta, lam, grad_dot)
-        beta_new = beta + res.alpha * dbeta
-        m_new = m + res.alpha * dm
-        return beta_new, m_new, res.f_new, res.alpha
+        return dbeta, dm, grad_dot
+
+    step_core = engine.make_step(iteration)
+
+    @jax.jit
+    def step(row_idx, values, y, beta, m, lam):
+        return step_core((row_idx, values), y, beta, m, lam)
 
     return step
 
 
-def make_dglmnet_step(mesh: Mesh, opts: DGLMNETOptions, *, model_axis: str = "model"):
-    """Builds a jitted distributed d-GLMNET outer iteration.
-
-    step(X, y, beta, m, lam) -> (beta', m', f', alpha)
-    """
+def make_distributed_iteration(mesh: Mesh, opts: DGLMNETOptions, *,
+                               model_axis: str = "model"):
+    """The mesh subproblem in the engine's ``iteration_fn`` signature:
+    ``iteration(X, y, beta, m, lam) -> (dbeta, dm, grad_dot)``."""
     daxes = _data_axes(mesh)
     dspec = P(daxes) if daxes else P()
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(daxes, model_axis), dspec, P(model_axis), dspec, P()),
         out_specs=(P(model_axis), dspec),
@@ -203,18 +210,34 @@ def make_dglmnet_step(mesh: Mesh, opts: DGLMNETOptions, *, model_axis: str = "mo
         dm = jax.lax.psum(dm, model_axis)
         return dbeta, dm
 
-    @jax.jit
-    def step(X, y, beta, m, lam):
+    def iteration(X, y, beta, m, lam):
         lam_arr = jnp.asarray(lam, jnp.float32)[None]
         dbeta, dm = subproblem_sharded(X, y, beta, m, lam_arr)
         # grad(L)^T dbeta from margins (global sharded arrays; XLA reduces)
         grad_dot = jnp.dot(jax.nn.sigmoid(m) - (y + 1.0) * 0.5, dm)
-        res = line_search(m, dm, y, beta, dbeta, lam, grad_dot)
-        beta_new = beta + res.alpha * dbeta
-        m_new = m + res.alpha * dm
-        return beta_new, m_new, res.f_new, res.alpha
+        return dbeta, dm, grad_dot
 
-    return step
+    return iteration
+
+
+def make_dglmnet_step(mesh: Mesh, opts: DGLMNETOptions, *, model_axis: str = "model"):
+    """Builds a jitted distributed d-GLMNET outer iteration.
+
+    step(X, y, beta, m, lam) -> (beta', m', f', alpha)
+    """
+    return engine.make_step(
+        make_distributed_iteration(mesh, opts, model_axis=model_axis)
+    )
+
+
+@lru_cache(maxsize=None)
+def _solver_for(mesh: Mesh, opts: DGLMNETOptions, model_axis: str):
+    return engine.make_solver(
+        make_distributed_iteration(mesh, opts, model_axis=model_axis),
+        max_iters=opts.max_iters,
+        rel_tol=opts.rel_tol,
+        snap_tol=opts.snap_tol,
+    )
 
 
 @dataclass
@@ -235,8 +258,10 @@ def fit_distributed(
     opts: DGLMNETOptions = DGLMNETOptions(),
     verbose: bool = False,
 ) -> DistributedFitResult:
-    """Python outer loop over the jitted distributed step (CPU-testable with
-    fake devices; same code lowers on the production mesh)."""
+    """Device-resident outer loop over the sharded subproblem (CPU-testable
+    with fake devices; same code lowers on the production mesh). The whole
+    solve is one jitted while_loop on the mesh — identical driver code to
+    the single-process ``fit`` (core/engine.py)."""
     daxes = _data_axes(mesh)
     n, p = X.shape
     ddim = 1
@@ -265,18 +290,13 @@ def fit_distributed(
     beta = jax.device_put(beta, bsharding)
     m = jax.device_put(margins(X, beta), vsharding)
 
-    step = make_dglmnet_step(mesh, opts)
-    f = float(objective(m, y, beta, lam))
-    hist = [f]
-    it = 0
-    for it in range(1, opts.max_iters + 1):
-        beta, m, f_new, alpha = step(X, y, beta, m, lam)
-        f_new = float(f_new)
-        rel = (hist[-1] - f_new) / max(abs(hist[-1]), 1e-12)
-        hist.append(f_new)
-        if verbose:
-            print(f"  [dist] iter {it} f={f_new:.6f} alpha={float(alpha):.3f}")
-        if rel < opts.rel_tol:
-            break
-    beta_out = beta[:p] if pad else beta
-    return DistributedFitResult(beta=beta_out, f=hist[-1], n_iters=it, objective_history=hist)
+    state = _solver_for(mesh, opts, "model")(X, y, beta, m, lam)
+    host, hist, _ = engine.fetch(state)            # the one d2h transfer
+    it = int(host.it)
+    if verbose:
+        for k in range(1, it + 1):
+            print(f"  [dist] iter {k} f={hist[k]:.6f}")
+    beta_out = state.beta[:p] if pad else state.beta
+    return DistributedFitResult(
+        beta=beta_out, f=hist[-1], n_iters=it, objective_history=hist
+    )

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import out_shape_struct
+
 
 def _gram_cd_kernel(scal_ref, G_ref, c_ref, beta_ref, dbeta0_ref, d_ref, s_ref):
     """Refs: scal (1,2)=[lam,nu] SMEM; G (F,F); c/beta/dbeta0 (1,F) VMEM;
@@ -58,14 +60,9 @@ def gram_cd_pallas(G, c, beta, dbeta0, lam, nu, *, interpret: bool = True):
     assert G.shape == (f, f) and c.shape == (f,)
     scal = jnp.stack([jnp.asarray(lam, jnp.float32), jnp.asarray(nu, jnp.float32)])[None]
     # under shard_map(check_vma=True) the out_shape must carry the varying
-    # mesh axes; outputs vary like (c, beta, dbeta0) jointly
-    vma = frozenset()
-    for operand in (c, beta, dbeta0, G):
-        try:
-            vma = vma | jax.typeof(operand).vma
-        except AttributeError:  # plain arrays outside shard_map
-            pass
-    out_shape = jax.ShapeDtypeStruct((1, f), jnp.float32, vma=vma)
+    # mesh axes; outputs vary like (c, beta, dbeta0) jointly. Older JAX has
+    # no vma typing — the compat helper degrades to a plain struct there.
+    out_shape = out_shape_struct((1, f), jnp.float32, operands=(c, beta, dbeta0, G))
     out = pl.pallas_call(
         _gram_cd_kernel,
         grid=(),

@@ -16,19 +16,18 @@ ICI_BW_PER_LINK = 50e9          # B/s per link (~ per-direction per link)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    from repro.compat import make_mesh
+
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_dev_mesh(data: int = 2, model: int = 4):
     """Small mesh for CPU tests (8 fake devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.compat import make_mesh
+
+    return make_mesh((data, model), ("data", "model"))
 
 
 def num_chips(mesh) -> int:

@@ -118,7 +118,9 @@ class Roofline:
 
 def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
             model_flops: float = 0.0) -> Roofline:
-    cost = compiled.cost_analysis()
+    from repro.compat import cost_analysis
+
+    cost = cost_analysis(compiled)
     # cost_analysis reports the per-device (post-SPMD-partitioning) module;
     # scale FLOPs to the global total (uniform across devices). bytes and
     # collective bytes stay per-device to match per-chip bandwidth terms.

@@ -33,8 +33,9 @@ def parse_mesh(spec: str):
         return make_production_mesh(multi_pod=True)
     dims = tuple(int(x) for x in spec.split("x"))
     names = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
-    return jax.make_mesh(dims, names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    from repro.compat import make_mesh
+
+    return make_mesh(dims, names)
 
 
 def main():

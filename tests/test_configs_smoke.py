@@ -10,6 +10,10 @@ import pytest
 from repro.configs import ARCH_IDS, MODEL_CONFIGS
 from repro.models import forward, init_cache, init_params
 from repro.train import make_train_state, make_train_step
+
+# ~45 s of LLM-config smokes, disjoint from the GLM core the fast lane
+# gates on — the CI slow lane runs them on every PR.
+pytestmark = pytest.mark.slow
 from repro.train.train_step import IGNORE
 
 

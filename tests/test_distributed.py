@@ -45,6 +45,7 @@ def test_distributed_equals_local():
     assert "OK" in r.stdout
 
 
+@pytest.mark.slow
 def test_distributed_model_axis_only():
     """Paper-faithful 1-D split (features only): data axis of size 1."""
     r = _run("""
@@ -69,6 +70,7 @@ def test_distributed_model_axis_only():
     assert r.returncode == 0, r.stderr[-3000:]
 
 
+@pytest.mark.slow
 def test_distributed_with_kernel():
     """Pallas gram_cd kernel inside shard_map (interpret mode)."""
     r = _run("""
@@ -92,6 +94,7 @@ def test_distributed_with_kernel():
     assert r.returncode == 0, r.stderr[-3000:]
 
 
+@pytest.mark.slow
 def test_flash_decode_equals_gather_decode():
     """Seq-parallel flash-decode must match the gather path numerically."""
     r = _run("""
@@ -153,6 +156,7 @@ def test_dev_mesh_dryrun_lowering():
         assert "1 ok, 0 skip, 0 error" in r.stdout
 
 
+@pytest.mark.slow
 def test_sparse_subproblem_equals_dense():
     """By-feature sparse distributed step == dense distributed step."""
     r = _run("""

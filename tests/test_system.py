@@ -19,6 +19,10 @@ from repro.data.synthetic import make_glm_dataset
 from repro.train.metrics import auprc, glm_eval_fn
 
 
+import pytest
+
+
+@pytest.mark.slow
 def test_regularization_path_and_figure1_dominance():
     cfg = GLMConfig(name="sys", num_examples=4096, num_features=256, density=1.0)
     ds = make_glm_dataset(cfg, jax.random.key(0))
