@@ -1,0 +1,66 @@
+"""CI perf gate: compare a fresh BENCH_regpath.json against the committed
+baseline and fail when the warm screened-path time regresses.
+
+The headline metric is ``engine.warm_s`` — the warm wall-clock of the
+screened path engine, which is what repeated production paths pay (cold
+time is dominated by XLA compiles and is allowed to drift). The gate is a
+ratio so the baseline only needs regenerating when shapes change:
+
+    python -m benchmarks.compare_bench \
+        --fresh BENCH_regpath.json \
+        --baseline benchmarks/baselines/BENCH_regpath_tiny.json \
+        --max-ratio 1.3
+
+Exits non-zero when fresh/baseline > max-ratio or when the configs don't
+match (a silent shape change would make the ratio meaningless).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--max-ratio", type=float, default=1.3,
+                    help="fail when fresh warm_s exceeds baseline by this "
+                         "factor (default 1.3)")
+    ap.add_argument("--normalize", action="store_true",
+                    help="divide each warm_s by the same run's seed-style "
+                         "warm_s before comparing, so raw machine speed "
+                         "cancels (use on heterogeneous CI runners)")
+    args = ap.parse_args()
+
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+
+    if fresh["config"] != base["config"]:
+        print(f"FAIL: config mismatch — fresh {fresh['config']} vs "
+              f"baseline {base['config']}; regenerate the baseline")
+        return 1
+
+    fresh_warm = fresh["engine"]["warm_s"]
+    base_warm = base["engine"]["warm_s"]
+    unit = "s"
+    if args.normalize:
+        fresh_warm /= max(fresh["seed_style"]["warm_s"], 1e-12)
+        base_warm /= max(base["seed_style"]["warm_s"], 1e-12)
+        unit = "x seed-style"
+    ratio = fresh_warm / max(base_warm, 1e-12)
+    print(f"engine warm path: fresh {fresh_warm:.3f}{unit} vs baseline "
+          f"{base_warm:.3f}{unit} -> ratio {ratio:.2f}x (gate {args.max_ratio}x)")
+    if ratio > args.max_ratio:
+        print(f"FAIL: warm path time regressed {ratio:.2f}x > "
+              f"{args.max_ratio}x")
+        return 1
+    print("OK: warm path time within gate")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,14 +14,39 @@ Both sides are run once to compile (cold) and once compiled (warm); the
 headline comparison — and the CI gate — is warm wall-clock, which is what
 repeated production paths pay.
 
+``--distributed`` adds a third driver — ``regularization_path_distributed``
+on a 2x4 fake-device mesh (same screened engine, restricted solves on the
+mesh); ``--sparse`` runs it over by-feature (row_idx, values) slabs so the
+whole path (screen included) never materializes a dense X.
+
     PYTHONPATH=src python -m benchmarks.regpath_bench            # paper-ish shape
     PYTHONPATH=src python -m benchmarks.regpath_bench --tiny     # CI smoke
+    PYTHONPATH=src python -m benchmarks.regpath_bench --tiny --distributed --sparse
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import re
+import sys
 import time
+
+if "--distributed" in sys.argv:
+    # the fake-device flag must land before the first jax import; an
+    # inherited count below 8 can't be overridden here, so fail loudly
+    # instead of letting make_dev_mesh(2, 4) error opaquely later
+    _flags = os.environ.get("XLA_FLAGS", "")
+    _m = re.search(r"--xla_force_host_platform_device_count=(\d+)", _flags)
+    if _m is None:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8"
+        )
+    elif int(_m.group(1)) < 8:
+        sys.exit(
+            f"--distributed needs >= 8 fake devices but XLA_FLAGS already "
+            f"forces {_m.group(1)}; unset XLA_FLAGS or raise the count"
+        )
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +76,15 @@ def engine_path(X, y, path_len: int, opts: DGLMNETOptions):
              **{f"screen_{k}": v for k, v in p.screen.items()}} for p in pts]
 
 
+def distributed_path(data, y, path_len: int, opts: DGLMNETOptions, mesh):
+    from repro.core import regularization_path_distributed
+
+    pts = regularization_path_distributed(data, y, mesh, path_len=path_len,
+                                          opts=opts)
+    return [{"lam": p.lam, "nnz": p.nnz, "f": p.f, "n_iters": p.n_iters,
+             **{f"screen_{k}": v for k, v in p.screen.items()}} for p in pts]
+
+
 def _timed(fn):
     t0 = time.perf_counter()
     out = fn()
@@ -59,7 +93,8 @@ def _timed(fn):
 
 def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
         density: float = 0.2, k_true: int = 64,
-        out_path: str = "BENCH_regpath.json") -> dict:
+        out_path: str = "BENCH_regpath.json",
+        distributed: bool = False, sparse: bool = False) -> dict:
     # sparse ground truth (k_true << p): the large-p regime screening is
     # for — most features never activate anywhere on the path
     cfg = GLMConfig(name="regpath-bench", num_examples=int(n / 0.8),
@@ -88,6 +123,30 @@ def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
         "speedup_cold": seed_cold / max(eng_cold, 1e-12),
         "engine_strictly_faster": eng_warm < seed_warm,
     }
+    if distributed:
+        from repro.launch.mesh import make_dev_mesh
+
+        mesh = make_dev_mesh(2, 4)
+        n_trim = (X.shape[0] // 2) * 2
+        Xd, yd = X[:n_trim], y[:n_trim]
+        if sparse:
+            from repro.data.byfeature import to_by_feature, to_slabs
+
+            row_idx, values, _ = to_slabs(to_by_feature(Xd), 2)
+            data = (row_idx, values)
+        else:
+            data = Xd
+        dist_rows, dist_cold = _timed(
+            lambda: distributed_path(data, yd, path_len, opts, mesh))
+        _, dist_warm = _timed(
+            lambda: distributed_path(data, yd, path_len, opts, mesh))
+        report["distributed"] = {
+            "mesh": dict(mesh.shape), "sparse": sparse,
+            "cold_s": dist_cold, "warm_s": dist_warm,
+            "per_lambda": dist_rows,
+        }
+        print(f"# distributed{' (sparse slabs)' if sparse else ''}: "
+              f"cold {dist_cold:.2f}s warm {dist_warm:.2f}s")
     with open(out_path, "w") as fh:
         json.dump(report, fh, indent=2)
     print(f"# seed-style: cold {seed_cold:.2f}s warm {seed_warm:.2f}s")
@@ -102,6 +161,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke shapes (seconds, not minutes)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="also time regularization_path_distributed on a "
+                         "2x4 fake-device mesh")
+    ap.add_argument("--sparse", action="store_true",
+                    help="with --distributed: run over by-feature sparse "
+                         "slabs (no dense X on the mesh path)")
     ap.add_argument("--out", default="BENCH_regpath.json")
     ap.add_argument("--n", type=int, default=2048)
     ap.add_argument("--p", type=int, default=4096)
@@ -110,8 +175,11 @@ def main():
     args = ap.parse_args()
     if args.tiny:
         args.n, args.p, args.path_len = 512, 256, 6
+    if args.sparse and not args.distributed:
+        ap.error("--sparse requires --distributed")
     report = run(n=args.n, p=args.p, path_len=args.path_len,
-                 density=args.density, out_path=args.out)
+                 density=args.density, out_path=args.out,
+                 distributed=args.distributed, sparse=args.sparse)
     # Screening pays in proportion to p; tiny CI-smoke shapes sit below the
     # break-even point, so the strictly-faster gate applies to real shapes.
     if not args.tiny and not report["engine_strictly_faster"]:

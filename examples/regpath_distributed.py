@@ -4,9 +4,12 @@ of 8 simulated devices (2 data x 4 model). The same code lowers on the
 production 16x16 mesh (see repro/launch/dryrun.py).
 
 Each distributed solve is one jitted while_loop on the mesh
-(core/engine.py) — no per-iteration host sync; the closing section runs
-the screened single-process path engine (strong rule + KKT post-check)
-to show what the active-set machinery saves at each lambda.
+(core/engine.py) — no per-iteration host sync. The closing section runs
+the *distributed screened path* (strong rule + KKT post-check around
+fit_distributed / fit_distributed_sparse): the active-set gather reshards
+the feature axis into a capacity-bucketed P(model) layout, and in the
+sparse flavor the screen streams by-feature (row_idx, values) slabs so no
+dense (n, p) X ever exists — the paper's webspam regime.
 
     python examples/regpath_distributed.py      # sets XLA flags itself
 """
@@ -71,23 +74,38 @@ def main():
           f"-> {'d-GLMNET wins' if best_d >= best_tg else 'TG wins'} "
           f"(paper Figure 1 conclusion)")
 
-    print("\n-- screened path engine (strong rule + KKT, single-process)")
+    print("\n-- distributed screened path (strong rule + KKT around "
+          "fit_distributed)")
     import time
 
-    from repro.core import regularization_path
+    from repro.core import regularization_path_distributed
 
+    opts = DGLMNETOptions(tile=64, max_iters=40)
     t0 = time.perf_counter()
-    pts = regularization_path(
-        X, y, path_len=8,
-        opts=DGLMNETOptions(num_blocks=4, tile=64, max_iters=40),
-        screen=True)
+    pts = regularization_path_distributed(X, y, mesh, path_len=8, opts=opts)
     dt = time.perf_counter() - t0
     for pt in pts:
         print(f"  lambda={pt.lam:9.3f} nnz={pt.nnz:5d} "
               f"active={pt.screen['active']:5d}/{X.shape[1]} "
               f"kkt_rounds={pt.screen['kkt_rounds']}")
-    print(f"  path wall-clock {dt:.2f}s "
-          f"(restricted solves reuse one compiled while_loop per bucket)")
+    print(f"  path wall-clock {dt:.2f}s (restricted solves stay on the "
+          f"mesh, one compiled while_loop per capacity bucket)")
+
+    print("\n-- same path over by-feature sparse slabs (no dense X anywhere)")
+    from repro.data.byfeature import to_by_feature, to_slabs
+
+    dp = 2  # data extent of the dev mesh
+    row_idx, values, n_loc = to_slabs(to_by_feature(X), dp)
+    t0 = time.perf_counter()
+    pts_sp = regularization_path_distributed(
+        (row_idx, values), y, mesh, path_len=8, opts=opts)
+    dt = time.perf_counter() - t0
+    for pt, pt_sp in zip(pts, pts_sp):
+        drift = abs(pt_sp.f - pt.f) / max(abs(pt.f), 1e-9)
+        print(f"  lambda={pt_sp.lam:9.3f} nnz={pt_sp.nnz:5d} "
+              f"active={pt_sp.screen['active']:5d} |f-f_dense|/|f|={drift:.2e}")
+    print(f"  sparse path wall-clock {dt:.2f}s "
+          f"(screen streams (row_idx, values) slabs, psum over data axes)")
 
 
 if __name__ == "__main__":

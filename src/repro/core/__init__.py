@@ -5,7 +5,13 @@ from repro.core.dglmnet import (  # noqa: F401
     fit,
     fit_python_loop,
 )
-from repro.core.distributed import fit_distributed, make_dglmnet_step  # noqa: F401
+from repro.core.distributed import (  # noqa: F401
+    DistributedFitResult,
+    fit_distributed,
+    fit_distributed_sparse,
+    make_dglmnet_step,
+    make_dglmnet_step_sparse,
+)
 from repro.core.engine import SolverState, make_solver, make_step  # noqa: F401
 from repro.core.linesearch import LineSearchResult, line_search  # noqa: F401
 from repro.core.objective import (  # noqa: F401
@@ -16,9 +22,14 @@ from repro.core.objective import (  # noqa: F401
     soft_threshold,
     working_stats,
 )
-from repro.core.regpath import PathPoint, regularization_path  # noqa: F401
+from repro.core.regpath import (  # noqa: F401
+    PathPoint,
+    regularization_path,
+    regularization_path_distributed,
+)
 from repro.core.screening import (  # noqa: F401
     kkt_violations,
+    nll_grad_abs_sparse,
     strong_rule_mask,
 )
 from repro.core.subproblem import (  # noqa: F401

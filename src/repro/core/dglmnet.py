@@ -199,9 +199,14 @@ def fit_python_loop(
         if stop:
             # Sparsity snap-back: prefer alpha=1 if the objective increase
             # is tolerable (keeps coordinates that landed exactly on 0).
+            # The histories report the *applied* step: overwrite the
+            # recorded alpha and count the promoted unit step.
             f_unit = float(f_alpha(1.0, m, dm, y, beta, dbeta, lam))
             if f_unit <= float(f_new) * (1.0 + opts.snap_tol) + 1e-12:
+                if float(alpha) != 1.0:
+                    unit_steps += 1
                 alpha, f_new = jnp.float32(1.0), jnp.float32(f_unit)
+                alphas[-1] = float(alpha)
             beta = beta + alpha * dbeta
             m = m + alpha * dm
             hist.append(float(f_new))

@@ -22,7 +22,7 @@ host synchronization either — sharded state stays on the mesh until the one
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import lru_cache, partial
 from typing import Optional, Tuple
 
@@ -142,9 +142,49 @@ def local_subproblem_sparse(row_idx, values, w_loc, r, beta_loc, lam, *,
     return dbeta, r
 
 
-def make_dglmnet_step_sparse(mesh: Mesh, opts: DGLMNETOptions, *,
-                             model_axis: str = "model"):
-    """Distributed step over by-feature sparse data.
+def _data_extent(mesh: Mesh) -> int:
+    ddim = 1
+    for ax in _data_axes(mesh):
+        ddim *= mesh.shape[ax]
+    return ddim
+
+
+def check_slab_shapes(row_idx, values, mesh: Mesh, n: int) -> int:
+    """Validate (p, DP, K) by-feature slabs against the mesh and example
+    count. Returns n_loc (= local examples per data shard)."""
+    if row_idx.shape != values.shape or row_idx.ndim != 3:
+        raise ValueError(
+            f"slab shapes must match and be (p, DP, K); got row_idx "
+            f"{row_idx.shape} vs values {values.shape}"
+        )
+    ddim = _data_extent(mesh)
+    if row_idx.shape[1] != ddim:
+        raise ValueError(
+            f"slab data dimension {row_idx.shape[1]} must equal the mesh "
+            f"data extent {ddim}"
+        )
+    if n % ddim:
+        raise ValueError(
+            f"data extent {ddim} must divide n={n} (trim or pad upstream)"
+        )
+    n_loc = n // ddim
+    # local row indices beyond the sentinel would be silently dropped by
+    # the scatter-adds downstream — catch a slab/y example-count mismatch
+    # here instead of converging to a wrong solution
+    max_row = int(row_idx.max()) if row_idx.size else 0
+    if max_row > n_loc:
+        raise ValueError(
+            f"slab row index {max_row} exceeds the local example count "
+            f"{n_loc} implied by n={n} on data extent {ddim} — were the "
+            f"slabs built for a different n?"
+        )
+    return n_loc
+
+
+def make_distributed_iteration_sparse(mesh: Mesh, opts: DGLMNETOptions, *,
+                                      model_axis: str = "model"):
+    """The by-feature sparse mesh subproblem in the engine's
+    ``iteration_fn`` signature, with ``data = (row_idx, values)``.
 
     row_idx/values are (p, DP, K): feature-major, one slab per data shard
     (local example indices, sentinel = n_loc); sharded P(model, data, -).
@@ -176,13 +216,50 @@ def make_dglmnet_step_sparse(mesh: Mesh, opts: DGLMNETOptions, *,
         grad_dot = jnp.dot(jax.nn.sigmoid(m) - (y + 1.0) * 0.5, dm)
         return dbeta, dm, grad_dot
 
-    step_core = engine.make_step(iteration)
+    return iteration
+
+
+def make_dglmnet_step_sparse(mesh: Mesh, opts: DGLMNETOptions, *,
+                             model_axis: str = "model"):
+    """Jitted distributed d-GLMNET outer iteration over by-feature slabs:
+    ``step(row_idx, values, y, beta, m, lam) -> (beta', m', f', alpha)``."""
+    step_core = engine.make_step(
+        make_distributed_iteration_sparse(mesh, opts, model_axis=model_axis)
+    )
 
     @jax.jit
     def step(row_idx, values, y, beta, m, lam):
         return step_core((row_idx, values), y, beta, m, lam)
 
     return step
+
+
+@lru_cache(maxsize=None)
+def make_slab_margins(mesh: Mesh, n_loc: int, model_axis: str = "model"):
+    """Sharded sparse matvec ``margins(row_idx, values, beta) -> m`` over
+    (p, DP, K) slabs: each (model, data) shard scatter-adds its features'
+    contributions into its local rows (an extra sentinel row swallows the
+    padding), then a psum over ``model`` assembles X @ beta exactly —
+    O(nnz) work, no dense X."""
+    daxes = _data_axes(mesh)
+    dspec = P(daxes) if daxes else P()
+
+    @jax.jit
+    @partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(model_axis, daxes, None), P(model_axis, daxes, None),
+                  P(model_axis)),
+        out_specs=dspec,
+    )
+    def slab_margins(row_idx, values, beta):
+        rows, vals = row_idx[:, 0, :], values[:, 0, :]
+        out = jnp.zeros(n_loc + 1, jnp.float32)
+        out = out.at[rows.reshape(-1)].add(
+            (vals * beta[:, None]).reshape(-1).astype(jnp.float32))
+        return jax.lax.psum(out[:n_loc], model_axis)
+
+    return slab_margins
 
 
 def make_distributed_iteration(mesh: Mesh, opts: DGLMNETOptions, *,
@@ -240,12 +317,34 @@ def _solver_for(mesh: Mesh, opts: DGLMNETOptions, model_axis: str):
     )
 
 
+@lru_cache(maxsize=None)
+def _solver_sparse_for(mesh: Mesh, opts: DGLMNETOptions, model_axis: str):
+    return engine.make_solver(
+        make_distributed_iteration_sparse(mesh, opts, model_axis=model_axis),
+        max_iters=opts.max_iters,
+        rel_tol=opts.rel_tol,
+        snap_tol=opts.snap_tol,
+    )
+
+
 @dataclass
 class DistributedFitResult:
+    """Mirror of ``FitResult`` for mesh solves — same epilogue telemetry
+    (the engine state carries it on device either way), plus the final
+    sharded margin cache ``m`` (P(data)), which the distributed path driver
+    reuses for its KKT pass instead of re-deriving X @ beta."""
     beta: jnp.ndarray
     f: float
     n_iters: int
     objective_history: list
+    alpha_history: list = field(default_factory=list)
+    unit_step_frac: float = 0.0
+    converged: bool = False
+    m: Optional[jnp.ndarray] = None
+
+    @property
+    def nnz(self) -> int:
+        return int(jnp.sum(jnp.abs(self.beta) > 0))
 
 
 def fit_distributed(
@@ -264,13 +363,11 @@ def fit_distributed(
     the single-process ``fit`` (core/engine.py)."""
     daxes = _data_axes(mesh)
     n, p = X.shape
-    ddim = 1
-    for ax in daxes:
-        ddim *= mesh.shape[ax]
+    ddim = _data_extent(mesh)
     mdim = mesh.shape["model"]
     if n % ddim:
         raise ValueError(
-            f"n={n} must divide the data extent {ddim} (trim or pad upstream)"
+            f"data extent {ddim} must divide n={n} (trim or pad upstream)"
         )
     # zero feature columns are safe padding: their coordinates stay at 0
     pad = (-p) % (mdim * opts.tile)
@@ -291,12 +388,74 @@ def fit_distributed(
     m = jax.device_put(margins(X, beta), vsharding)
 
     state = _solver_for(mesh, opts, "model")(X, y, beta, m, lam)
-    host, hist, _ = engine.fetch(state)            # the one d2h transfer
+    return _finish(state, p, pad, verbose, "dist")
+
+
+def _finish(state, p: int, pad: int, verbose: bool,
+            tag: str) -> DistributedFitResult:
+    """Shared solve epilogue: the one d2h transfer + result assembly."""
+    host, hist, alphas = engine.fetch(state)
     it = int(host.it)
     if verbose:
         for k in range(1, it + 1):
-            print(f"  [dist] iter {k} f={hist[k]:.6f}")
+            print(f"  [{tag}] iter {k} f={hist[k]:.6f}")
     beta_out = state.beta[:p] if pad else state.beta
     return DistributedFitResult(
-        beta=beta_out, f=hist[-1], n_iters=it, objective_history=hist
+        beta=beta_out, f=hist[-1], n_iters=it, objective_history=hist,
+        alpha_history=alphas,
+        unit_step_frac=int(host.unit_steps) / max(it, 1),
+        converged=bool(host.converged),
+        m=state.m,
     )
+
+
+def fit_distributed_sparse(
+    row_idx,
+    values,
+    y,
+    lam: float,
+    mesh: Mesh,
+    *,
+    beta0: Optional[jnp.ndarray] = None,
+    opts: DGLMNETOptions = DGLMNETOptions(),
+    verbose: bool = False,
+) -> DistributedFitResult:
+    """``fit_distributed`` over by-feature sparse slabs (p, DP, K) — the
+    webspam-scale layout where a dense X can never exist on any machine.
+    Same device-resident engine loop; the subproblem densifies one feature
+    tile at a time on its own shard and nothing else ever does."""
+    daxes = _data_axes(mesh)
+    n = y.shape[0]
+    n_loc = check_slab_shapes(row_idx, values, mesh, n)
+    mdim = mesh.shape["model"]
+    p = row_idx.shape[0]
+    # sentinel-row feature padding is safe: all-sentinel slabs contribute
+    # nothing to any Gram tile, so their coordinates stay at 0
+    pad = (-p) % (mdim * opts.tile)
+    if pad:
+        row_idx = jnp.pad(row_idx, ((0, pad), (0, 0), (0, 0)),
+                          constant_values=n_loc)
+        values = jnp.pad(values, ((0, pad), (0, 0), (0, 0)))
+        if beta0 is not None:
+            beta0 = jnp.pad(beta0, (0, pad))
+    slab_sharding = NamedSharding(mesh, P("model", daxes, None))
+    vsharding = NamedSharding(mesh, P(daxes))
+    bsharding = NamedSharding(mesh, P("model"))
+
+    row_idx = jax.device_put(row_idx, slab_sharding)
+    values = jax.device_put(values, slab_sharding)
+    y = jax.device_put(y, vsharding)
+    beta = (
+        jnp.zeros(row_idx.shape[0], jnp.float32)
+        if beta0 is None else beta0.astype(jnp.float32)
+    )
+    beta = jax.device_put(beta, bsharding)
+    if beta0 is None:
+        m = jax.device_put(jnp.zeros(n, jnp.float32), vsharding)
+    else:
+        m = make_slab_margins(mesh, n_loc)(row_idx, values, beta)
+
+    state = _solver_sparse_for(mesh, opts, "model")(
+        (row_idx, values), y, beta, m, lam
+    )
+    return _finish(state, p, pad, verbose, "dist-sparse")

@@ -149,16 +149,24 @@ def make_solver(
         # Sparsity snap-back epilogue (paper §3.3 / seed `fit`): prefer
         # alpha = 1 on the final step if the objective increase is within
         # snap_tol — coordinates the CD solver drove exactly to zero stay
-        # zero. Runs on device; the stashed step is applied here.
+        # zero. Runs on device; the stashed step is applied here. The
+        # histories must describe the *applied* step: a_hist's final entry
+        # is overwritten with the snapped alpha, and a snap that promotes a
+        # fractional alpha to 1 counts as a unit step (the body only
+        # counted the line search's own short-circuits).
         f_unit = f_alpha(1.0, s.m, s.dm, y, s.beta, s.dbeta, lam)
         snap = f_unit <= s.f_new * (1.0 + snap_tol) + 1e-12
         alpha = jnp.where(snap, jnp.float32(1.0), s.alpha)
         f_fin = jnp.where(snap, f_unit, s.f_new)
+        snapped_up = jnp.logical_and(snap, s.alpha != 1.0)
         return s._replace(
             beta=s.beta + alpha * s.dbeta,
             m=s.m + alpha * s.dm,
             f=f_fin,
+            alpha=alpha,
             f_hist=s.f_hist.at[s.it].set(f_fin),
+            a_hist=s.a_hist.at[s.it - 1].set(alpha),
+            unit_steps=s.unit_steps + snapped_up.astype(jnp.int32),
         )
 
     return jax.jit(solve)

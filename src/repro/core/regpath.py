@@ -18,6 +18,18 @@ Trofimov & Genkin 1611.02101) identifies as decisive for distributed L1:
   is certified optimal afterwards via the full-gradient KKT condition, and
   violators (rare) re-enter and re-solve. Large-p path points cost
   O(active) instead of O(p).
+
+Both drivers share one strong-rule/KKT loop (:func:`_screened_point`):
+
+* :func:`regularization_path` — single-process restricted solves
+  (``core.dglmnet.fit``), dense gradient pass.
+* :func:`regularization_path_distributed` — restricted solves are
+  ``fit_distributed`` / ``fit_distributed_sparse`` on a mesh; the
+  active-set gather becomes a feature-axis reshard into a
+  capacity-bucketed P(model) layout, and with by-feature sparse slabs the
+  screen streams (row_idx, values) tiles under shard_map (psum over the
+  data axes) so a dense (n, p) X is never materialized anywhere — the
+  paper's headline webspam regime (p = 16.6M).
 """
 from __future__ import annotations
 
@@ -27,15 +39,23 @@ from typing import Callable, List, Optional
 import jax.numpy as jnp
 
 from repro.core.dglmnet import DGLMNETOptions, FitResult, fit
+from repro.core.distributed import (
+    DistributedFitResult,
+    check_slab_shapes,
+    fit_distributed,
+    fit_distributed_sparse,
+)
 from repro.core.objective import lambda_max, margins, objective
 from repro.core.screening import (
     capacity_bucket,
     gather_columns,
     kkt_violations,
+    make_sparse_screen,
     nll_grad_abs,
     scatter_columns,
     strong_rule_mask,
 )
+from repro.data.byfeature import ByFeature, gather_features, scatter_features
 
 
 @dataclass
@@ -49,15 +69,26 @@ class PathPoint:
     screen: dict = field(default_factory=dict)   # active-set telemetry
 
 
-def _fit_screened(X, y, lam, lam_prev, beta, m, opts, *, kkt_tol, max_kkt_rounds):
-    """One path point: strong-rule restricted solve + KKT certification.
+def _lambda_grid(lmax: float, path_len: int,
+                 extra_lams: Optional[List[float]]) -> List[float]:
+    lams = [lmax * 2.0 ** (-i) for i in range(1, path_len + 1)]
+    if extra_lams:
+        lams = sorted(set(lams) | set(extra_lams), reverse=True)
+    return lams
 
-    Returns (res, beta_full, m_full, info). Only the active-set and
-    violation *counts* are synced to host (to pick the capacity bucket and
-    decide termination) — the solves themselves stay device-resident.
+
+def _screened_point(p, lam, lam_prev, beta, m, *, grad_abs, restricted_solve,
+                    empty_result, cap_tile, kkt_tol, max_kkt_rounds):
+    """One path point of the strong-rule/KKT loop, solver-agnostic.
+
+    ``grad_abs(m) -> |g|`` is the full-gradient pass (dense matvec or the
+    sharded slab stream); ``restricted_solve(mask, cap, beta) -> (res,
+    beta_full, m_full)`` solves the capacity-``cap`` restricted problem
+    warm-started from ``beta``. Only the active-set and violation *counts*
+    are synced to host (to pick the capacity bucket and decide
+    termination) — the solves themselves stay device-resident.
     """
-    n, p = X.shape
-    g_abs = nll_grad_abs(X, y, m)                 # gradient at the warm start
+    g_abs = grad_abs(m)
     mask = strong_rule_mask(g_abs, lam, lam_prev, beta)
 
     res = None
@@ -68,15 +99,11 @@ def _fit_screened(X, y, lam, lam_prev, beta, m, opts, *, kkt_tol, max_kkt_rounds
         if count == 0:
             # empty working set: beta stays 0 (strong rule + no support)
             beta_new, m_new = beta, m
-            res = FitResult(beta=beta, f=float("nan"), n_iters=0,
-                            objective_history=[], alpha_history=[])
+            res = empty_result(beta)
         else:
-            cap = capacity_bucket(count, p, tile=opts.tile)
-            X_sub, beta_sub, idx = gather_columns(X, beta, mask, cap)
-            res = fit(X_sub, y, lam, beta0=beta_sub, opts=opts)
-            beta_new = scatter_columns(res.beta, idx, p)
-            m_new = X_sub @ res.beta              # == X @ beta_new (pads are 0)
-        g_abs = nll_grad_abs(X, y, m_new)
+            cap = capacity_bucket(count, p, tile=cap_tile)
+            res, beta_new, m_new = restricted_solve(mask, cap, beta)
+        g_abs = grad_abs(m_new)
         viol = kkt_violations(g_abs, lam, mask, tol=kkt_tol)
         n_viol = int(viol.sum())
         if n_viol == 0:
@@ -91,6 +118,32 @@ def _fit_screened(X, y, lam, lam_prev, beta, m, opts, *, kkt_tol, max_kkt_rounds
 
     info = {"active": int(mask.sum()), "capacity": cap, "kkt_rounds": rounds}
     return res, beta_new, m_new, info
+
+
+def _fit_screened(X, y, lam, lam_prev, beta, m, opts, *, kkt_tol,
+                  max_kkt_rounds):
+    """Single-process path point: strong-rule restricted ``fit`` + KKT
+    certification. Returns (res, beta_full, m_full, info)."""
+    n, p = X.shape
+
+    def grad_abs(m_cur):
+        return nll_grad_abs(X, y, m_cur)
+
+    def restricted_solve(mask, cap, beta_cur):
+        X_sub, beta_sub, idx = gather_columns(X, beta_cur, mask, cap)
+        res = fit(X_sub, y, lam, beta0=beta_sub, opts=opts)
+        beta_full = scatter_columns(res.beta, idx, p)
+        return res, beta_full, X_sub @ res.beta   # == X @ beta_full (pads 0)
+
+    def empty_result(beta_cur):
+        return FitResult(beta=beta_cur, f=float("nan"), n_iters=0,
+                         objective_history=[], alpha_history=[])
+
+    return _screened_point(
+        p, lam, lam_prev, beta, m, grad_abs=grad_abs,
+        restricted_solve=restricted_solve, empty_result=empty_result,
+        cap_tile=opts.tile, kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
+    )
 
 
 def regularization_path(
@@ -114,9 +167,7 @@ def regularization_path(
     screening tests compare against).
     """
     lmax = float(lambda_max(X, y))
-    lams = [lmax * 2.0 ** (-i) for i in range(1, path_len + 1)]
-    if extra_lams:
-        lams = sorted(set(lams) | set(extra_lams), reverse=True)
+    lams = _lambda_grid(lmax, path_len, extra_lams)
 
     n, p = X.shape
     beta = jnp.zeros(p, jnp.float32)
@@ -141,6 +192,147 @@ def regularization_path(
         points.append(
             PathPoint(lam=lam, nnz=nnz, f=f, n_iters=res.n_iters,
                       beta=beta, metrics=metrics, screen=info)
+        )
+        if verbose:
+            print(
+                f"lambda={lam:10.4f} nnz={nnz:6d} f={points[-1].f:12.4f} "
+                f"iters={res.n_iters:3d} {info} {metrics}"
+            )
+    return points
+
+
+def regularization_path_distributed(
+    data,
+    y,
+    mesh,
+    *,
+    path_len: int = 20,
+    opts: DGLMNETOptions = DGLMNETOptions(),
+    eval_fn: Optional[Callable[[jnp.ndarray], dict]] = None,
+    extra_lams: Optional[List[float]] = None,
+    verbose: bool = False,
+    kkt_tol: float = 1e-3,
+    max_kkt_rounds: int = 8,
+) -> List[PathPoint]:
+    """The screened path with every restricted solve on the mesh
+    (Algorithm 5 run distributed — the paper's webspam-scale regime).
+
+    ``data`` is either a dense (n, p) X (restricted solves are
+    ``fit_distributed``), a :class:`~repro.data.byfeature.ByFeature`, or a
+    pre-built ``(row_idx, values)`` slab pair of shape (p, DP, K) with
+    local row indices (restricted solves are ``fit_distributed_sparse``).
+    In the sparse forms the strong-rule/KKT gradient passes stream the
+    slabs under shard_map (``core.screening.make_sparse_screen``) and the
+    active-set gather/scatter operates on slabs
+    (``data.byfeature.gather_features``), so no dense (n, p) X is ever
+    materialized — neither on host nor on any device.
+
+    The active-set gather is the feature-axis reshard: the working set's
+    columns/slabs are packed into a capacity-bucketed P(model) layout
+    (``capacity_bucket`` with tile ``model_dim * opts.tile``, so restricted
+    shapes stay mesh-aligned and at most O(log(p/tile)) programs compile),
+    and the restricted solution is scattered back to the full feature axis.
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.distributed import _data_axes, _data_extent
+
+    daxes = _data_axes(mesh)
+    ddim = _data_extent(mesh)
+    mdim = mesh.shape["model"]
+    cap_tile = mdim * opts.tile
+    n = y.shape[0]
+
+    if isinstance(data, ByFeature):
+        from repro.data.byfeature import to_slabs
+
+        if data.n != n:
+            raise ValueError(f"ByFeature has n={data.n} but len(y)={n}")
+        row_idx, values, _ = to_slabs(data, ddim)
+        data = (row_idx, values)
+
+    sparse = isinstance(data, tuple)
+    if sparse:
+        row_idx, values = data
+        n_loc = check_slab_shapes(row_idx, values, mesh, n)
+        p = row_idx.shape[0]
+        # pad the feature axis once so the streaming screen's tile walk and
+        # every capacity bucket stay mesh-aligned; all-sentinel slabs have
+        # zero gradient and zero coefficient, so they are never admitted
+        pad = (-p) % cap_tile
+        if pad:
+            row_idx = jnp.pad(row_idx, ((0, pad), (0, 0), (0, 0)),
+                              constant_values=n_loc)
+            values = jnp.pad(values, ((0, pad), (0, 0), (0, 0)))
+        p_work = p + pad
+        slab_sharding = NamedSharding(mesh, P("model", daxes, None))
+        vsharding = NamedSharding(mesh, P(daxes))
+        row_idx = jax.device_put(row_idx, slab_sharding)
+        values = jax.device_put(values, slab_sharding)
+        y = jax.device_put(y, vsharding)
+        screen_fn = make_sparse_screen(mesh, n_loc, opts.tile)
+
+        def grad_abs(m_cur):
+            return screen_fn(row_idx, values, y, m_cur)
+
+        def make_restricted_solve(lam):
+            def restricted_solve(mask, cap, beta_cur):
+                rows_sub, vals_sub, beta_sub, idx = gather_features(
+                    row_idx, values, beta_cur, mask, cap, sentinel=n_loc)
+                res = fit_distributed_sparse(
+                    rows_sub, vals_sub, y, lam, mesh, beta0=beta_sub,
+                    opts=opts)
+                return res, scatter_features(res.beta, idx, p_work), res.m
+            return restricted_solve
+
+        m = jax.device_put(jnp.zeros(n, jnp.float32), vsharding)
+        # at beta = 0 the NLL gradient is -0.5 * X^T y, so the sparse
+        # screen pass at zero margins *is* lambda_max — no dense X needed
+        lmax = float(jnp.max(grad_abs(m)))
+    else:
+        X = data
+        if X.shape[0] != n:
+            raise ValueError(f"X rows {X.shape[0]} != len(y) {n}")
+        p = p_work = X.shape[1]
+
+        def grad_abs(m_cur):
+            return nll_grad_abs(X, y, m_cur)
+
+        def make_restricted_solve(lam):
+            def restricted_solve(mask, cap, beta_cur):
+                X_sub, beta_sub, idx = gather_columns(X, beta_cur, mask, cap)
+                res = fit_distributed(X_sub, y, lam, mesh, beta0=beta_sub,
+                                      opts=opts)
+                return res, scatter_columns(res.beta, idx, p_work), res.m
+            return restricted_solve
+
+        m = jnp.zeros(n, jnp.float32)
+        lmax = float(lambda_max(X, y))
+
+    def empty_result(beta_cur):
+        return DistributedFitResult(beta=beta_cur, f=float("nan"), n_iters=0,
+                                    objective_history=[])
+
+    lams = _lambda_grid(lmax, path_len, extra_lams)
+    beta = jnp.zeros(p_work, jnp.float32)
+    lam_prev = lmax
+    points: List[PathPoint] = []
+    for lam in lams:
+        res, beta, m, info = _screened_point(
+            p_work, lam, lam_prev, beta, m, grad_abs=grad_abs,
+            restricted_solve=make_restricted_solve(lam),
+            empty_result=empty_result, cap_tile=cap_tile,
+            kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
+        )
+        lam_prev = lam
+        beta_out = beta[:p]
+        nnz = int(jnp.sum(jnp.abs(beta_out) > 0))
+        f = float(res.f) if res.n_iters else float(objective(m, y, beta, lam))
+        metrics = eval_fn(beta_out) if eval_fn else {}
+        points.append(
+            PathPoint(lam=lam, nnz=nnz, f=f, n_iters=res.n_iters,
+                      beta=beta_out, metrics=metrics, screen=info)
         )
         if verbose:
             print(

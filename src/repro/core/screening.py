@@ -18,8 +18,11 @@ All predicates run on device; only the active-set *size* crosses to host
 """
 from __future__ import annotations
 
+from functools import lru_cache, partial
+
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.objective import grad_nll_from_margins
 
@@ -27,6 +30,26 @@ from repro.core.objective import grad_nll_from_margins
 def nll_grad_abs(X, y, m) -> jnp.ndarray:
     """|g_j| = |x_j^T (sigmoid(m) - (y+1)/2)| for all p features."""
     return jnp.abs(grad_nll_from_margins(m, y, X))
+
+
+def _nll_residual(m, y):
+    """v = sigmoid(m) - (y+1)/2, the per-example NLL gradient factor."""
+    return jax.nn.sigmoid(m) - (y + 1.0) * 0.5
+
+
+@jax.jit
+def nll_grad_abs_sparse(row_idx, values, y, m) -> jnp.ndarray:
+    """Sparse-native |g_j| over a by-feature layout (paper Table 1).
+
+    ``row_idx``/``values`` are (p, K) with sentinel row index n; the pass is
+    a pure gather-reduce over the slabs — g_j = |sum_k v[row_idx[j,k]] *
+    values[j,k]| with v padded by one zero to swallow sentinels — so a dense
+    (n, p) X is never materialized. Memory is O(nnz), the size of the slabs
+    themselves.
+    """
+    v = _nll_residual(m, y)
+    v_pad = jnp.concatenate([v, jnp.zeros(1, v.dtype)])
+    return jnp.abs(jnp.sum(values * v_pad[row_idx], axis=-1))
 
 
 @jax.jit
@@ -74,6 +97,16 @@ def capacity_bucket(count: int, p: int, *, tile: int) -> int:
     return min(cap, p)
 
 
+def pack_indices(mask, cap: int) -> jnp.ndarray:
+    """Stable front-pack of the selected indices into shape ``(cap,)``,
+    sentinel ``p`` (== mask size) marking padding. The shared primitive
+    behind the dense column gather here and the slab gather in
+    ``data/byfeature.py``."""
+    p = mask.shape[0]
+    order = jnp.argsort(jnp.where(mask, jnp.arange(p), p))
+    return jnp.where(jnp.arange(p) < jnp.sum(mask), order, p)[:cap]
+
+
 def gather_columns(X, beta, mask, cap: int):
     """Device-side gather of the working set into a (n, cap) problem.
 
@@ -82,10 +115,7 @@ def gather_columns(X, beta, mask, cap: int):
     coordinates provably stay at zero (soft-threshold of a zero gradient)
     and the restricted solve is exactly the masked full solve.
     """
-    p = X.shape[1]
-    # stable front-pack of the selected indices, sentinel p for padding
-    order = jnp.argsort(jnp.where(mask, jnp.arange(p), p))
-    idx = jnp.where(jnp.arange(p) < jnp.sum(mask), order, p)[:cap]
+    idx = pack_indices(mask, cap)
     X_sub = jnp.take(X, idx, axis=1, mode="fill", fill_value=0.0)
     beta_sub = jnp.take(beta, idx, mode="fill", fill_value=0.0)
     return X_sub, beta_sub, idx
@@ -95,3 +125,57 @@ def scatter_columns(beta_sub, idx, p: int):
     """Inverse of :func:`gather_columns`: restricted solution -> full
     beta (padding rows dropped via out-of-bounds scatter)."""
     return jnp.zeros(p, beta_sub.dtype).at[idx].set(beta_sub, mode="drop")
+
+
+@lru_cache(maxsize=None)
+def make_sparse_screen(mesh: Mesh, n_loc: int, tile: int,
+                       model_axis: str = "model"):
+    """Distributed strong-rule gradient pass over by-feature sparse slabs.
+
+    Builds a jitted ``screen(row_idx, values, y, m) -> g_abs`` where
+    ``row_idx``/``values`` are the (p, DP, K) mesh slabs (sharded
+    P(model, data, None), local row indices with sentinel ``n_loc``) and
+    ``y``/``m`` are example-sharded P(data). Inside ``shard_map`` each
+    (model, data) shard walks its feature tiles with a ``lax.scan`` —
+    per-tile memory is (tile, K), never a dense (n, p) block — computing the
+    partial gradients from its local rows; a psum over the data axes yields
+    the exact row-global |g_j|, feature-sharded P(model). The result feeds
+    :func:`strong_rule_mask` and :func:`kkt_violations` unchanged (both are
+    elementwise in g_abs), making the whole screen sparse-native.
+    """
+    from repro.compat import shard_map
+    from repro.core.distributed import _data_axes
+
+    daxes = _data_axes(mesh)
+    dspec = P(daxes) if daxes else P()
+
+    @jax.jit
+    @partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(model_axis, daxes, None), P(model_axis, daxes, None),
+                  dspec, dspec),
+        out_specs=P(model_axis),
+    )
+    def screen(row_idx, values, y, m):
+        rows, vals = row_idx[:, 0, :], values[:, 0, :]
+        p_loc, k = rows.shape
+        assert p_loc % tile == 0, (
+            f"per-shard feature count {p_loc} must be a multiple of "
+            f"tile={tile} (pad the slabs upstream)"
+        )
+        v = _nll_residual(m, y)
+        v_pad = jnp.concatenate([v, jnp.zeros(1, v.dtype)])
+
+        def tile_pass(_, i):
+            rt = jax.lax.dynamic_slice(rows, (i * tile, 0), (tile, k))
+            vt = jax.lax.dynamic_slice(vals, (i * tile, 0), (tile, k))
+            return None, jnp.sum(vt * v_pad[rt], axis=-1)
+
+        _, g = jax.lax.scan(tile_pass, None, jnp.arange(p_loc // tile))
+        g = g.reshape(p_loc)
+        for ax in daxes:
+            g = jax.lax.psum(g, ax)
+        return jnp.abs(g)
+
+    return screen

@@ -38,6 +38,14 @@ class ByFeature:
     def nnz(self) -> int:
         return int((self.row_idx < self.n).sum())
 
+    def gather(self, beta, mask, cap: int):
+        """Screened working set as a restricted ByFeature (see
+        :func:`gather_features`). Returns ``(bf_sub, beta_sub, idx)``."""
+        r, v, b, idx = gather_features(
+            self.row_idx, self.values, beta, mask, cap, sentinel=self.n
+        )
+        return ByFeature(r, v, self.n), b, idx
+
 
 def to_by_feature(X) -> ByFeature:
     """Dense (n, p) -> by-feature padded CSC (the Reduce step of paper §3)."""
@@ -81,19 +89,26 @@ def write_table1(bf: ByFeature, fh: TextIO) -> None:
 
 
 def read_table1(fh: TextIO, n: int) -> ByFeature:
-    rows_all, vals_all = [], []
+    """Parse the Table-1 format honoring the leading feature id.
+
+    Lines may arrive in any order (a Map/Reduce shuffle gives no ordering
+    guarantee); the feature id — not the line position — decides where a
+    feature lands. Ids absent from the file become empty (all-sentinel)
+    features; a repeated id keeps the last occurrence.
+    """
+    feats = {}
     for line in fh:
         parts = line.split()
         if not parts:
             continue
+        j = int(parts[0])
         entries = [p.strip("()").split(":") for p in parts[1:]]
-        rows_all.append([int(i) for i, _ in entries])
-        vals_all.append([float(v) for _, v in entries])
-    p = len(rows_all)
-    k = max((len(r) for r in rows_all), default=1) or 1
+        feats[j] = ([int(i) for i, _ in entries], [float(v) for _, v in entries])
+    p = max(feats) + 1 if feats else 0
+    k = max((len(r) for r, _ in feats.values()), default=1) or 1
     row_idx = np.full((p, k), n, np.int32)
     values = np.zeros((p, k), np.float32)
-    for j, (r, v) in enumerate(zip(rows_all, vals_all)):
+    for j, (r, v) in feats.items():
         row_idx[j, : len(r)] = r
         values[j, : len(v)] = v
     return ByFeature(jnp.asarray(row_idx), jnp.asarray(values), n)
@@ -103,3 +118,79 @@ def partition_features(p: int, num_machines: int) -> Tuple[np.ndarray, ...]:
     """Contiguous feature blocks S_1..S_M (paper's Reduce-side partitioning)."""
     bounds = np.linspace(0, p, num_machines + 1).astype(int)
     return tuple(np.arange(bounds[i], bounds[i + 1]) for i in range(num_machines))
+
+
+# ---------------------------------------------------------------------------
+# Mesh slabs: the (p, DP, K) layout the distributed sparse step consumes
+# ---------------------------------------------------------------------------
+
+def to_slabs(bf: ByFeature, dp: int):
+    """Re-key a by-feature layout for ``dp`` data shards.
+
+    Examples are split into ``dp`` contiguous shards of n_loc = n/dp rows
+    each; every feature's entries are regrouped per shard with *local* row
+    indices (sentinel n_loc). Returns ``(row_idx (p, dp, K'), values
+    (p, dp, K'), n_loc)`` — exactly the operands of
+    ``core.distributed.make_dglmnet_step_sparse`` / ``fit_distributed_sparse``
+    under sharding P(model, data, None).
+    """
+    if bf.n % dp:
+        raise ValueError(
+            f"data shard count {dp} must divide n={bf.n} (trim or pad upstream)"
+        )
+    n_loc = bf.n // dp
+    ri = np.asarray(bf.row_idx)
+    vv = np.asarray(bf.values)
+    p = bf.p
+    # fully vectorized regroup (p can be webspam-scale): flatten the live
+    # entries, key them by (feature, shard), and compute each entry's rank
+    # within its group from the stable sort of the keys
+    j_idx, k_idx = np.nonzero(ri < bf.n)
+    rows = ri[j_idx, k_idx]
+    vals = vv[j_idx, k_idx]
+    shard = rows // max(n_loc, 1)
+    group = j_idx * dp + shard
+    counts = np.bincount(group, minlength=p * dp)
+    k = max(1, int(counts.max()) if counts.size else 1)
+    order = np.argsort(group, kind="stable")
+    group_sorted = group[order]
+    starts = np.concatenate([[0], np.cumsum(counts)])[:-1]
+    rank = np.arange(len(group_sorted)) - starts[group_sorted]
+    row_idx = np.full((p, dp, k), n_loc, np.int32)
+    values = np.zeros((p, dp, k), np.float32)
+    jj, ss = group_sorted // dp, group_sorted % dp
+    row_idx[jj, ss, rank] = (rows - shard * n_loc)[order]
+    values[jj, ss, rank] = vals[order]
+    return jnp.asarray(row_idx), jnp.asarray(values), n_loc
+
+
+def gather_features(row_idx, values, beta, mask, cap: int, *, sentinel: int):
+    """Feature-axis gather of the screened working set into slab form.
+
+    ``row_idx``/``values`` are feature-major — ``(p, K)`` (single ByFeature)
+    or ``(p, DP, K)`` (mesh slabs); selection happens on axis 0 only, so the
+    restricted problem stays in slab form end-to-end (no densification).
+    Returns ``(row_idx_sub, values_sub, beta_sub, idx)`` with ``idx`` of
+    shape ``(cap,)`` carrying sentinel ``p`` for padding; padded features are
+    all-sentinel/zero slabs, so their coordinates provably stay at zero and
+    the restricted solve equals the masked full solve. On a mesh this gather
+    *is* the active-set reshard: the working set's slabs land back in a
+    capacity-bucketed P(model) layout.
+    """
+    from repro.core.screening import pack_indices
+
+    idx = pack_indices(mask, cap)
+    row_idx_sub = jnp.take(row_idx, idx, axis=0, mode="fill",
+                           fill_value=sentinel)
+    values_sub = jnp.take(values, idx, axis=0, mode="fill", fill_value=0.0)
+    beta_sub = jnp.take(beta, idx, mode="fill", fill_value=0.0)
+    return row_idx_sub, values_sub, beta_sub, idx
+
+
+def scatter_features(beta_sub, idx, p: int):
+    """Inverse of :func:`gather_features`: restricted solution -> full beta.
+    The coefficient scatter is layout-agnostic, so this is exactly the dense
+    column scatter."""
+    from repro.core.screening import scatter_columns
+
+    return scatter_columns(beta_sub, idx, p)

@@ -49,6 +49,73 @@ def test_table1_text_round_trip():
     np.testing.assert_allclose(densify(bf2), densify(bf), atol=0)
 
 
+def test_table1_out_of_order_round_trip():
+    """A Map/Reduce shuffle gives no line ordering: the leading feature id,
+    not the line position, must decide where a feature lands."""
+    X = _rand_sparse(n=20, p=10, seed=3)
+    bf = to_by_feature(X)
+    buf = io.StringIO()
+    write_table1(bf, buf)
+    lines = buf.getvalue().splitlines(keepends=True)
+    rng = np.random.default_rng(0)
+    shuffled = [lines[i] for i in rng.permutation(len(lines))]
+    bf2 = read_table1(io.StringIO("".join(shuffled)), bf.n)
+    np.testing.assert_allclose(densify(bf2), densify(bf), atol=0)
+
+
+def test_table1_gap_features_stay_empty():
+    """Ids absent from the file become empty features at their position."""
+    bf = read_table1(io.StringIO("3 (1:2.5)\n0 (0:1.0) (4:-1.0)\n"), n=6)
+    assert bf.p == 4
+    dense = np.asarray(densify(bf))
+    np.testing.assert_allclose(dense[:, 0], [1.0, 0, 0, 0, -1.0, 0])
+    assert not dense[:, 1].any() and not dense[:, 2].any()
+    np.testing.assert_allclose(dense[:, 3], [0, 2.5, 0, 0, 0, 0])
+
+
+def test_to_slabs_local_reindexing():
+    """to_slabs regroups each feature's entries per data shard with local
+    row indices; re-assembling the shards recovers the dense matrix."""
+    from repro.data.byfeature import to_slabs
+
+    X = _rand_sparse(n=24, p=7, seed=4)
+    bf = to_by_feature(X)
+    row_idx, values, n_loc = to_slabs(bf, 4)
+    assert n_loc == 6 and row_idx.shape[:2] == (7, 4)
+    dense = np.zeros((24, 7), np.float32)
+    ri, vv = np.asarray(row_idx), np.asarray(values)
+    for j in range(7):
+        for s in range(4):
+            live = ri[j, s] < n_loc
+            dense[s * n_loc + ri[j, s][live], j] = vv[j, s][live]
+    np.testing.assert_allclose(dense, np.asarray(X), atol=0)
+
+
+def test_gather_scatter_features_roundtrip():
+    """Slab gather/scatter mirrors the dense column gather: selected slabs
+    match, padding is all-sentinel, and scatter restores the masked beta."""
+    import jax.numpy as jnp
+
+    from repro.data.byfeature import gather_features, scatter_features
+
+    X = _rand_sparse(n=16, p=12, seed=5)
+    bf = to_by_feature(X)
+    beta = jnp.arange(12, dtype=jnp.float32)
+    mask = jnp.arange(12) % 3 == 0
+    rows_sub, vals_sub, beta_sub, idx = gather_features(
+        bf.row_idx, bf.values, beta, mask, cap=8, sentinel=bf.n)
+    sel = np.flatnonzero(np.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(rows_sub[: len(sel)]),
+                                  np.asarray(bf.row_idx)[sel])
+    np.testing.assert_allclose(np.asarray(vals_sub[: len(sel)]),
+                               np.asarray(bf.values)[sel])
+    assert np.all(np.asarray(rows_sub[len(sel):]) == bf.n)
+    assert np.all(np.asarray(vals_sub[len(sel):]) == 0)
+    back = scatter_features(beta_sub, idx, 12)
+    np.testing.assert_allclose(np.asarray(back),
+                               np.asarray(jnp.where(mask, beta, 0.0)))
+
+
 def test_partition_features_covers_all():
     parts = partition_features(103, 16)
     allidx = np.concatenate(parts)

@@ -110,6 +110,33 @@ def test_engine_respects_max_iters(small_glm):
     assert len(res.alpha_history) == res.n_iters
 
 
+def test_snapback_epilogue_records_applied_step(small_glm):
+    """The snap-back epilogue applies alpha=1; the reported telemetry must
+    describe that applied step — alpha_history ends in 1.0, the snapped
+    unit step is counted, and f_hist[-1] is the objective at the returned
+    beta (engine and python-loop oracle agree on all of it)."""
+    from repro.core.objective import objective
+
+    X, y = small_glm.X_train, small_glm.y_train
+    lam = float(lambda_max(X, y)) / 64
+    # a huge snap_tol forces the snap on the final step regardless of the
+    # line search's alpha, so the pre-fix misreport is always exercised
+    opts = DGLMNETOptions(num_blocks=4, tile=32, max_iters=4, snap_tol=10.0)
+    eng = fit(X, y, lam, opts=opts)
+    ref = fit_python_loop(X, y, lam, opts=opts)
+
+    assert eng.alpha_history[-1] == 1.0
+    assert ref.alpha_history[-1] == 1.0
+    np.testing.assert_allclose(eng.alpha_history, ref.alpha_history,
+                               rtol=1e-5, atol=1e-6)
+    assert eng.unit_step_frac == ref.unit_step_frac
+    # the applied final step is a unit step, so at least one was counted
+    assert round(eng.unit_step_frac * eng.n_iters) >= 1
+    f_at_beta = float(objective(margins(X, eng.beta), y, eng.beta, lam))
+    np.testing.assert_allclose(eng.objective_history[-1], f_at_beta,
+                               rtol=1e-5)
+
+
 def test_make_step_matches_manual_iteration(small_glm):
     """engine.make_step == subproblem + line search + apply, one iteration."""
     from repro.core.dglmnet import _iteration
