@@ -1,18 +1,28 @@
 """CI perf gate: compare a fresh BENCH_regpath.json against the committed
-baseline and fail when the warm screened-path time regresses.
+baseline and fail when a gated metric regresses.
 
-The headline metric is ``engine.warm_s`` — the warm wall-clock of the
-screened path engine, which is what repeated production paths pay (cold
-time is dominated by XLA compiles and is allowed to drift). The gate is a
-ratio so the baseline only needs regenerating when shapes change:
+Gated metrics (each applied only when present in *both* reports):
+
+* ``engine.warm_s`` — warm wall-clock of the screened path engine, the
+  headline number repeated production paths pay (cold time is dominated
+  by XLA compiles and is allowed to drift).
+* ``distributed.warm_s`` — warm wall-clock of the sparse-distributed
+  screened path (the by-feature slab hot path), so the per-iteration
+  densify-scatter regression this suite killed can't come back unnoticed.
+* ``kernels.slab_*.speedup`` — sparse-native slab kernel vs the densify
+  reference at matched shapes; the speedup may not collapse relative to
+  baseline in the regimes where the slab kernel is the preferred path.
+
+All time gates are ratios so the baseline only needs regenerating when
+shapes change:
 
     python -m benchmarks.compare_bench \
         --fresh BENCH_regpath.json \
         --baseline benchmarks/baselines/BENCH_regpath_tiny.json \
         --max-ratio 1.3
 
-Exits non-zero when fresh/baseline > max-ratio or when the configs don't
-match (a silent shape change would make the ratio meaningless).
+Exits non-zero when any gate fails or when the configs don't match (a
+silent shape change would make the ratios meaningless).
 """
 from __future__ import annotations
 
@@ -21,13 +31,24 @@ import json
 import sys
 
 
+def _gate_time(name, fresh_s, base_s, max_ratio, unit="s") -> bool:
+    ratio = fresh_s / max(base_s, 1e-12)
+    print(f"{name}: fresh {fresh_s:.3f}{unit} vs baseline {base_s:.3f}{unit}"
+          f" -> ratio {ratio:.2f}x (gate {max_ratio}x)")
+    if ratio > max_ratio:
+        print(f"FAIL: {name} regressed {ratio:.2f}x > {max_ratio}x")
+        return False
+    return True
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", required=True)
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--max-ratio", type=float, default=1.3,
-                    help="fail when fresh warm_s exceeds baseline by this "
-                         "factor (default 1.3)")
+                    help="fail when a fresh warm_s exceeds baseline by this "
+                         "factor, or a kernel speedup falls below baseline "
+                         "by it (default 1.3)")
     ap.add_argument("--normalize", action="store_true",
                     help="divide each warm_s by the same run's seed-style "
                          "warm_s before comparing, so raw machine speed "
@@ -44,21 +65,62 @@ def main() -> int:
               f"baseline {base['config']}; regenerate the baseline")
         return 1
 
-    fresh_warm = fresh["engine"]["warm_s"]
-    base_warm = base["engine"]["warm_s"]
-    unit = "s"
-    if args.normalize:
-        fresh_warm /= max(fresh["seed_style"]["warm_s"], 1e-12)
-        base_warm /= max(base["seed_style"]["warm_s"], 1e-12)
-        unit = "x seed-style"
-    ratio = fresh_warm / max(base_warm, 1e-12)
-    print(f"engine warm path: fresh {fresh_warm:.3f}{unit} vs baseline "
-          f"{base_warm:.3f}{unit} -> ratio {ratio:.2f}x (gate {args.max_ratio}x)")
-    if ratio > args.max_ratio:
-        print(f"FAIL: warm path time regressed {ratio:.2f}x > "
-              f"{args.max_ratio}x")
+    def norm(report):
+        return max(report["seed_style"]["warm_s"], 1e-12) \
+            if args.normalize else 1.0
+
+    unit = "x seed-style" if args.normalize else "s"
+    ok = _gate_time("engine warm path",
+                    fresh["engine"]["warm_s"] / norm(fresh),
+                    base["engine"]["warm_s"] / norm(base),
+                    args.max_ratio, unit)
+
+    # a section present in the baseline but absent from the fresh report
+    # means the bench stopped measuring it — that must fail, not silently
+    # skip the gate (e.g. someone dropping --kernels from the CI lane)
+    for section in ("distributed", "kernels"):
+        if section in base and section not in fresh:
+            print(f"FAIL: baseline has a '{section}' section but the fresh "
+                  f"report does not — was the bench flag dropped?")
+            ok = False
+
+    if "distributed" in fresh and "distributed" in base:
+        if fresh["distributed"].get("sparse") != base["distributed"].get("sparse"):
+            print("FAIL: distributed sparse flag mismatch vs baseline")
+            ok = False
+        else:
+            ok &= _gate_time("sparse-distributed warm path",
+                             fresh["distributed"]["warm_s"] / norm(fresh),
+                             base["distributed"]["warm_s"] / norm(base),
+                             args.max_ratio, unit)
+
+    if "kernels" in fresh and "kernels" in base:
+        for name, row in sorted(base["kernels"].items()):
+            if not isinstance(row, dict) or "speedup" not in row:
+                continue
+            if not row.get("preferred", name.startswith("slab_spmv")):
+                continue   # dense-fallback regime: speedup < 1 is expected
+            fresh_row = fresh["kernels"].get(name)
+            if fresh_row is None:
+                print(f"FAIL: kernel entry {name} missing from fresh report")
+                ok = False
+                continue
+            # microbench speedups are noisier than path wall-clock: the
+            # floor is capped at 1.1x, which still catches the failure
+            # mode that matters (collapse toward 1x = the densify scatter
+            # is back) without flapping on sub-100us timing jitter
+            floor = min(row["speedup"] / (args.max_ratio ** 2), 1.1)
+            print(f"kernel {name}: speedup fresh {fresh_row['speedup']:.2f}x"
+                  f" vs baseline {row['speedup']:.2f}x (floor {floor:.2f}x)")
+            if fresh_row["speedup"] < floor:
+                print(f"FAIL: {name} sparse-native speedup collapsed "
+                      f"({fresh_row['speedup']:.2f}x < {floor:.2f}x) — did "
+                      f"the densify come back?")
+                ok = False
+
+    if not ok:
         return 1
-    print("OK: warm path time within gate")
+    print("OK: all benchmark gates within bounds")
     return 0
 
 

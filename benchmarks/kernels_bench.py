@@ -1,15 +1,28 @@
-"""Kernel micro-benchmarks (interpret-mode on CPU: correctness-surface
-timing only; TPU wall-times come from the roofline analysis)."""
+"""Kernel micro-benchmarks.
+
+Two groups:
+
+* solver-oracle timings (the pure-jnp forms the CPU paths actually run;
+  interpret-mode Pallas is a correctness surface, not a fast path — TPU
+  wall-times come from the roofline analysis);
+* the sparse slab suite (``--kernels`` section of the path benchmark and
+  the CI densify-regression gate): ``kernels.slab_gram`` / ``slab_spmv``
+  against the per-tile densify-scatter they replaced, at webspam-like
+  per-feature nnz (K = 4..16, the ``prefer_slab_gram`` regime) and at the
+  dense-fallback K where the scatter+MXU path is the right call.
+"""
 from __future__ import annotations
 
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
 from repro.core.subproblem import cd_cycle_gram_tile
-from repro.kernels.ref import logistic_stats_ref
+from repro.kernels import ops
+from repro.kernels.ref import logistic_stats_ref, slab_gram_ref, slab_spmv_ref
 
 
 def _time(fn, *args, reps=5):
@@ -20,6 +33,54 @@ def _time(fn, *args, reps=5):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps
+
+
+def _make_slab(t, k, n_loc, seed=0):
+    rng = np.random.default_rng(seed)
+    rows = np.full((t, k), n_loc, np.int32)
+    vals = np.zeros((t, k), np.float32)
+    for f in range(t):
+        kk = int(rng.integers(max(1, k // 2), k + 1))
+        rr = np.sort(rng.choice(n_loc, size=kk, replace=False))
+        rows[f, :kk] = rr
+        vals[f, :kk] = rng.standard_normal(kk)
+    return jnp.asarray(rows), jnp.asarray(vals)
+
+
+def bench_slab_suite(*, n_loc: int = 1024, tile: int = 128,
+                     ks=(4, 8, 16, 64), reps: int = 10) -> dict:
+    """Times the sparse-native slab kernels against the densify-scatter
+    reference at matched shapes. Returns a JSON-able dict; ``speedup`` > 1
+    means the slab kernel beats re-densifying the tile (expected in the
+    ``prefer_slab_gram`` regime, i.e. small K)."""
+    key = jax.random.key(0)
+    w = jnp.abs(jax.random.normal(key, (n_loc,))) * 0.2 + 0.01
+    r = jax.random.normal(jax.random.fold_in(key, 1), (n_loc,))
+    d = jax.random.normal(jax.random.fold_in(key, 2), (tile,))
+
+    gram_sparse = jax.jit(ops.slab_gram)
+    gram_densify = jax.jit(slab_gram_ref)
+    spmv_sparse = jax.jit(lambda rw, vl, dd: ops.slab_spmv(rw, vl, dd,
+                                                           n_loc=n_loc))
+    spmv_densify = jax.jit(lambda rw, vl, dd: slab_spmv_ref(rw, vl, dd,
+                                                            n_loc))
+    out = {"n_loc": n_loc, "tile": tile}
+    for k in ks:
+        rows, vals = _make_slab(tile, k, n_loc, seed=k)
+        ts = _time(gram_sparse, rows, vals, w, r, reps=reps)
+        td = _time(gram_densify, rows, vals, w, r, reps=reps)
+        out[f"slab_gram_K{k}"] = {
+            "sparse_us": ts * 1e6, "densify_us": td * 1e6,
+            "speedup": td / max(ts, 1e-12),
+            "preferred": ops.prefer_slab_gram(n_loc, k),
+        }
+        ts = _time(spmv_sparse, rows, vals, d, reps=reps)
+        td = _time(spmv_densify, rows, vals, d, reps=reps)
+        out[f"slab_spmv_K{k}"] = {
+            "sparse_us": ts * 1e6, "densify_us": td * 1e6,
+            "speedup": td / max(ts, 1e-12),
+        }
+    return out
 
 
 def run():
@@ -38,6 +99,11 @@ def run():
         jitted = jax.jit(lambda m, y: logistic_stats_ref(m, y))
         dt = _time(jitted, m, y)
         emit(f"kernel.logistic_stats_ref.n{n}", dt * 1e6, f"bytes~{n*16}")
+    slab = bench_slab_suite()
+    for name, row in slab.items():
+        if isinstance(row, dict):
+            emit(f"kernel.{name}.sparse", row["sparse_us"],
+                 f"speedup_vs_densify={row['speedup']:.2f}x")
 
 
 if __name__ == "__main__":

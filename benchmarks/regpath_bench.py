@@ -94,7 +94,8 @@ def _timed(fn):
 def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
         density: float = 0.2, k_true: int = 64,
         out_path: str = "BENCH_regpath.json",
-        distributed: bool = False, sparse: bool = False) -> dict:
+        distributed: bool = False, sparse: bool = False,
+        kernels: bool = False, tiny: bool = False) -> dict:
     # sparse ground truth (k_true << p): the large-p regime screening is
     # for — most features never activate anywhere on the path
     cfg = GLMConfig(name="regpath-bench", num_examples=int(n / 0.8),
@@ -147,6 +148,19 @@ def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
         }
         print(f"# distributed{' (sparse slabs)' if sparse else ''}: "
               f"cold {dist_cold:.2f}s warm {dist_warm:.2f}s")
+    if kernels:
+        from benchmarks.kernels_bench import bench_slab_suite
+
+        # same shapes in CI and locally: the gate needs the regime where
+        # the sparse-native win is decisive (a densify regression reads as
+        # speedup ~1x, which tiny shapes cannot distinguish from noise);
+        # fewer reps keep the tiny budget
+        report["kernels"] = bench_slab_suite(reps=5 if tiny else 10)
+        for name, row in report["kernels"].items():
+            if isinstance(row, dict):
+                print(f"# kernel {name}: sparse {row['sparse_us']:.0f}us "
+                      f"vs densify {row['densify_us']:.0f}us "
+                      f"({row['speedup']:.2f}x)")
     with open(out_path, "w") as fh:
         json.dump(report, fh, indent=2)
     print(f"# seed-style: cold {seed_cold:.2f}s warm {seed_warm:.2f}s")
@@ -167,6 +181,9 @@ def main():
     ap.add_argument("--sparse", action="store_true",
                     help="with --distributed: run over by-feature sparse "
                          "slabs (no dense X on the mesh path)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="add the slab kernel microbench section "
+                         "(sparse-native vs densify at matched shapes)")
     ap.add_argument("--out", default="BENCH_regpath.json")
     ap.add_argument("--n", type=int, default=2048)
     ap.add_argument("--p", type=int, default=4096)
@@ -179,7 +196,8 @@ def main():
         ap.error("--sparse requires --distributed")
     report = run(n=args.n, p=args.p, path_len=args.path_len,
                  density=args.density, out_path=args.out,
-                 distributed=args.distributed, sparse=args.sparse)
+                 distributed=args.distributed, sparse=args.sparse,
+                 kernels=args.kernels, tiny=args.tiny)
     # Screening pays in proportion to p; tiny CI-smoke shapes sit below the
     # break-even point, so the strictly-faster gate applies to real shapes.
     if not args.tiny and not report["engine_strictly_faster"]:

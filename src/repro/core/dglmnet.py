@@ -77,15 +77,18 @@ def _pad_features(X, beta, num_blocks):
     return X, beta, p
 
 
-def _iteration(X, y, beta, m, lam, opts: DGLMNETOptions):
+def _iteration(X, y, beta, m, lam, opts: DGLMNETOptions, w=None, z=None):
     """One outer iteration: block subproblems -> combined (dbeta, dm).
 
     Blocks are solved with vmap — numerically identical to M machines
     solving independently (block-diagonal Hessian, paper eq. (9)).
     Un-jitted body: jitted standalone as ``dglmnet_iteration`` and traced
-    into the engine's while_loop by ``fit``.
+    into the engine's while_loop by ``fit``. The engine passes the fused
+    working stats ``(w, z)`` in (one margins sweep per outer iteration);
+    the standalone form computes them itself.
     """
-    w, z = working_stats(m, y)
+    if w is None:
+        w, z = working_stats(m, y)
     Xp, betap, p = _pad_features(X, beta, opts.num_blocks)
     n, pp = Xp.shape
     mblk = opts.num_blocks
@@ -119,8 +122,8 @@ def _solver_for(opts: DGLMNETOptions):
     """One compiled while_loop program per options bundle (lam is traced,
     so a whole regularization path reuses a single compilation)."""
 
-    def iteration(X, y, beta, m, lam):
-        return _iteration(X, y, beta, m, lam, opts)
+    def iteration(X, y, beta, m, lam, w, z):
+        return _iteration(X, y, beta, m, lam, opts, w, z)
 
     return engine.make_solver(
         iteration,

@@ -33,9 +33,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import pcast_varying, shard_map
 from repro.core import engine
 from repro.core.dglmnet import DGLMNETOptions
-from repro.core.linesearch import f_alpha, line_search
-from repro.core.objective import margins, objective, working_stats
-from repro.core.subproblem import NU, cd_cycle_gram_tile
+from repro.core.objective import margins
+from repro.core.subproblem import cd_cycle_gram_tile
 
 
 def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -102,37 +101,36 @@ def local_subproblem_sparse(row_idx, values, w_loc, r, beta_loc, lam, *,
     """Sparse by-feature variant (paper Table 1 layout at webspam scale).
 
     row_idx/values: (p_loc, K) — per local feature, its local-example rows
-    (sentinel n_loc) and values; the Gram stage densifies one feature tile
-    at a time with a scatter (DESIGN §2.3), then proceeds identically.
+    (sentinel n_loc) and values. Each feature tile's weighted Gram block
+    and correlation come straight from the slab via the sparse-native
+    kernel layer (``kernels.slab_gram``: a match-and-accumulate join over
+    nnz slots) and the residual advances with the O(nnz) slab SpMV — no
+    ``(n_loc, tile)`` densify scatter anywhere. Sentinel slots contribute
+    exactly zero for every slab capacity, including all-padding
+    (empty-feature) slabs. Callers in the dense-density regime should
+    densify once per solve instead (``fit_distributed_sparse`` does, per
+    ``kernels.prefer_slab_gram``) — this body is the K << n_loc path.
     """
+    from repro.kernels import ops as kops
+
     n_loc = r.shape[0]
-    p_loc = row_idx.shape[0]
+    p_loc, k = row_idx.shape
     assert p_loc % tile == 0, (p_loc, tile)
     nt = p_loc // tile
     r = pcast_varying(r, "model")
 
-    def densify(idx):
-        rows = jax.lax.dynamic_slice(row_idx, (idx * tile, 0), (tile, row_idx.shape[1]))
-        vals = jax.lax.dynamic_slice(values, (idx * tile, 0), (tile, values.shape[1]))
-        out = jnp.zeros((n_loc + 1, tile), jnp.float32)
-        cols = jnp.broadcast_to(jnp.arange(tile)[:, None], rows.shape)
-        out = out.at[rows.reshape(-1), cols.reshape(-1)].add(
-            vals.reshape(-1).astype(jnp.float32))
-        return out[:n_loc]
-
     def tile_step(carry, idx):
         r, dbeta = carry
-        Xf = densify(idx)                                 # (n_loc, tile)
-        wXf = w_loc[:, None] * Xf
-        G = Xf.T @ wXf
-        c = wXf.T @ r
+        rows = jax.lax.dynamic_slice(row_idx, (idx * tile, 0), (tile, k))
+        vals = jax.lax.dynamic_slice(values, (idx * tile, 0), (tile, k))
+        G, c = kops.slab_gram(rows, vals, w_loc, r)
         for ax in data_axes:
             G = jax.lax.psum(G, ax)
             c = jax.lax.psum(c, ax)
         b_f = jax.lax.dynamic_slice(beta_loc, (idx * tile,), (tile,))
         db_f = jax.lax.dynamic_slice(dbeta, (idx * tile,), (tile,))
         d = cd_cycle_gram_tile(G, c, b_f, db_f, lam, nu)
-        r = r - Xf @ d
+        r = r - kops.slab_spmv(rows, vals, d, n_loc=n_loc)
         dbeta = jax.lax.dynamic_update_slice(dbeta, db_f + d, (idx * tile,))
         return (r, dbeta), None
 
@@ -197,11 +195,10 @@ def make_distributed_iteration_sparse(mesh: Mesh, opts: DGLMNETOptions, *,
         shard_map,
         mesh=mesh,
         in_specs=(P(model_axis, daxes, None), P(model_axis, daxes, None),
-                  dspec, P(model_axis), dspec, P()),
+                  P(model_axis), dspec, dspec, P()),
         out_specs=(P(model_axis), dspec),
     )
-    def subproblem_sharded(row_idx, values, y, beta, m, lam):
-        w, z = working_stats(m, y)
+    def subproblem_sharded(row_idx, values, beta, w, z, lam):
         dbeta, r = local_subproblem_sparse(
             row_idx[:, 0, :], values[:, 0, :], w, z, beta, lam[0],
             tile=opts.tile, nu=opts.nu, data_axes=daxes,
@@ -209,10 +206,10 @@ def make_distributed_iteration_sparse(mesh: Mesh, opts: DGLMNETOptions, *,
         dm = jax.lax.psum(z - r, model_axis)
         return dbeta, dm
 
-    def iteration(data, y, beta, m, lam):
+    def iteration(data, y, beta, m, lam, w, z):
         row_idx, values = data
         lam_arr = jnp.asarray(lam, jnp.float32)[None]
-        dbeta, dm = subproblem_sharded(row_idx, values, y, beta, m, lam_arr)
+        dbeta, dm = subproblem_sharded(row_idx, values, beta, w, z, lam_arr)
         grad_dot = jnp.dot(jax.nn.sigmoid(m) - (y + 1.0) * 0.5, dm)
         return dbeta, dm, grad_dot
 
@@ -237,10 +234,12 @@ def make_dglmnet_step_sparse(mesh: Mesh, opts: DGLMNETOptions, *,
 @lru_cache(maxsize=None)
 def make_slab_margins(mesh: Mesh, n_loc: int, model_axis: str = "model"):
     """Sharded sparse matvec ``margins(row_idx, values, beta) -> m`` over
-    (p, DP, K) slabs: each (model, data) shard scatter-adds its features'
-    contributions into its local rows (an extra sentinel row swallows the
-    padding), then a psum over ``model`` assembles X @ beta exactly —
-    O(nnz) work, no dense X."""
+    (p, DP, K) slabs: each (model, data) shard runs the slab SpMV kernel
+    over its features (``kernels.slab_spmv`` — O(nnz), sentinel slots
+    exact zero), then a psum over ``model`` assembles X @ beta exactly —
+    no dense X, no densify."""
+    from repro.kernels import ops as kops
+
     daxes = _data_axes(mesh)
     dspec = P(daxes) if daxes else P()
 
@@ -254,12 +253,39 @@ def make_slab_margins(mesh: Mesh, n_loc: int, model_axis: str = "model"):
     )
     def slab_margins(row_idx, values, beta):
         rows, vals = row_idx[:, 0, :], values[:, 0, :]
-        out = jnp.zeros(n_loc + 1, jnp.float32)
-        out = out.at[rows.reshape(-1)].add(
-            (vals * beta[:, None]).reshape(-1).astype(jnp.float32))
-        return jax.lax.psum(out[:n_loc], model_axis)
+        m_loc = kops.slab_spmv(rows, vals, beta, n_loc=n_loc)
+        return jax.lax.psum(m_loc, model_axis)
 
     return slab_margins
+
+
+@lru_cache(maxsize=None)
+def make_slab_densifier(mesh: Mesh, n_loc: int, model_axis: str = "model"):
+    """One-shot on-mesh densify ``(row_idx, values) -> X`` (P(data, model))
+    — the dense-Gram fallback setup for slabs above the sparse-win density
+    (``kernels.prefer_slab_gram``). The scatter runs once per solve at
+    O(nnz) and the solve then rides the dense MXU subproblem, instead of
+    paying a per-tile densify on every outer iteration; a dense (n, p_sub)
+    block only ever exists sharded on the mesh, never on host."""
+    daxes = _data_axes(mesh)
+
+    @jax.jit
+    @partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(model_axis, daxes, None), P(model_axis, daxes, None)),
+        out_specs=P(daxes, model_axis),
+    )
+    def densify(row_idx, values):
+        rows, vals = row_idx[:, 0, :], values[:, 0, :]
+        p_loc = rows.shape[0]
+        va = jnp.where(rows < n_loc, vals, 0.0).astype(jnp.float32)
+        out = jnp.zeros((p_loc, n_loc + 1), jnp.float32)
+        out = out.at[jnp.arange(p_loc)[:, None],
+                     jnp.minimum(rows, n_loc)].add(va)
+        return out[:, :n_loc].T
+
+    return densify
 
 
 def make_distributed_iteration(mesh: Mesh, opts: DGLMNETOptions, *,
@@ -272,12 +298,11 @@ def make_distributed_iteration(mesh: Mesh, opts: DGLMNETOptions, *,
     @partial(
         shard_map,
         mesh=mesh,
-        in_specs=(P(daxes, model_axis), dspec, P(model_axis), dspec, P()),
+        in_specs=(P(daxes, model_axis), P(model_axis), dspec, dspec, P()),
         out_specs=(P(model_axis), dspec),
         check_vma=not opts.use_kernel,
     )
-    def subproblem_sharded(X, y, beta, m, lam):
-        w, z = working_stats(m, y)
+    def subproblem_sharded(X, beta, w, z, lam):
         dbeta, r = local_subproblem(
             X, w, z, beta, lam[0], tile=opts.tile, nu=opts.nu,
             data_axes=daxes, use_kernel=opts.use_kernel,
@@ -287,9 +312,9 @@ def make_distributed_iteration(mesh: Mesh, opts: DGLMNETOptions, *,
         dm = jax.lax.psum(dm, model_axis)
         return dbeta, dm
 
-    def iteration(X, y, beta, m, lam):
+    def iteration(X, y, beta, m, lam, w, z):
         lam_arr = jnp.asarray(lam, jnp.float32)[None]
-        dbeta, dm = subproblem_sharded(X, y, beta, m, lam_arr)
+        dbeta, dm = subproblem_sharded(X, beta, w, z, lam_arr)
         # grad(L)^T dbeta from margins (global sharded arrays; XLA reduces)
         grad_dot = jnp.dot(jax.nn.sigmoid(m) - (y + 1.0) * 0.5, dm)
         return dbeta, dm, grad_dot
@@ -419,11 +444,22 @@ def fit_distributed_sparse(
     beta0: Optional[jnp.ndarray] = None,
     opts: DGLMNETOptions = DGLMNETOptions(),
     verbose: bool = False,
+    densify: Optional[bool] = None,
 ) -> DistributedFitResult:
     """``fit_distributed`` over by-feature sparse slabs (p, DP, K) — the
     webspam-scale layout where a dense X can never exist on any machine.
-    Same device-resident engine loop; the subproblem densifies one feature
-    tile at a time on its own shard and nothing else ever does."""
+    Same device-resident engine loop. The subproblem implementation is
+    picked by the nnz-density heuristic (``kernels.prefer_slab_gram``,
+    overridable via ``densify``):
+
+    * sparse-native (K << n_loc): every Gram tile and residual update
+      comes straight from the slabs via the ``kernels.slab_gram`` /
+      ``slab_spmv`` suite — no densify anywhere, O(nnz)-dominated work;
+    * dense fallback (denser slabs): one O(nnz) on-mesh densify *per
+      solve* builds the sharded (n, p) block and the solve rides the
+      dense MXU subproblem — instead of the old per-tile, per-iteration
+      densify scatter that dominated the hot loop.
+    """
     daxes = _data_axes(mesh)
     n = y.shape[0]
     n_loc = check_slab_shapes(row_idx, values, mesh, n)
@@ -454,6 +490,15 @@ def fit_distributed_sparse(
         m = jax.device_put(jnp.zeros(n, jnp.float32), vsharding)
     else:
         m = make_slab_margins(mesh, n_loc)(row_idx, values, beta)
+
+    if densify is None:
+        from repro.kernels.ops import prefer_slab_gram
+
+        densify = not prefer_slab_gram(n_loc, row_idx.shape[2])
+    if densify:
+        X = make_slab_densifier(mesh, n_loc)(row_idx, values)
+        state = _solver_for(mesh, opts, "model")(X, y, beta, m, lam)
+        return _finish(state, p, pad, verbose, "dist-sparse-dense")
 
     state = _solver_sparse_for(mesh, opts, "model")(
         (row_idx, values), y, beta, m, lam

@@ -22,9 +22,15 @@ Both the single-process (``core.dglmnet.fit``) and mesh
 :func:`make_solver` — they differ only in the ``iteration_fn`` they plug
 in, so the outer loop is one piece of code reviewed once.
 
-``iteration_fn(data, y, beta, m, lam) -> (dbeta, dm, grad_dot)`` is the
-pluggable subproblem: ``data`` is an arbitrary pytree (dense ``X``,
+``iteration_fn(data, y, beta, m, lam, w, z) -> (dbeta, dm, grad_dot)`` is
+the pluggable subproblem: ``data`` is an arbitrary pytree (dense ``X``,
 by-feature sparse slabs, sharded arrays — the engine never inspects it).
+``(w, z)`` are the GLMNET working statistics at ``m``: the engine computes
+them *once* per outer iteration through the fused ``kernels.logistic_stats``
+pass (margins -> (w, z, nll) in one sweep over the examples axis — the
+Pallas kernel on TPU, one XLA-fused sweep elsewhere) and hands the NLL to
+the line search as its ``f_alpha(0)`` evaluation, so no subproblem or
+line-search entry recomputes sigmoid/softplus over ``n``.
 """
 from __future__ import annotations
 
@@ -35,7 +41,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.linesearch import f_alpha, line_search
-from repro.core.objective import objective
+from repro.core.objective import l1_norm, objective
+from repro.kernels.ops import logistic_stats
 
 # Indirection point so tests can count the per-solve host transfers.
 device_get = jax.device_get
@@ -62,10 +69,13 @@ class SolverState(NamedTuple):
 
 
 def _advance(iteration_fn, data, y, beta, m, lam):
-    """One outer step: subproblem + line search. Shared by the while-loop
-    body and by :func:`make_step` (the single-iteration public API)."""
-    dbeta, dm, grad_dot = iteration_fn(data, y, beta, m, lam)
-    res = line_search(m, dm, y, beta, dbeta, lam, grad_dot)
+    """One outer step: fused working stats + subproblem + line search.
+    Shared by the while-loop body and by :func:`make_step` (the
+    single-iteration public API)."""
+    w, z, nll0 = logistic_stats(m, y)
+    f0 = nll0 + lam * l1_norm(beta)
+    dbeta, dm, grad_dot = iteration_fn(data, y, beta, m, lam, w, z)
+    res = line_search(m, dm, y, beta, dbeta, lam, grad_dot, f0=f0)
     return dbeta, dm, res
 
 

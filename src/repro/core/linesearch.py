@@ -78,13 +78,16 @@ def line_search(
     grad_dot_dbeta,    # scalar: grad L(beta)^T dbeta
     quad_term=0.0,     # scalar: dbeta^T H~ dbeta (gamma=0 -> unused)
     *,
+    f0=None,           # precomputed f(alpha=0) (the engine's fused-stats
+                       # pass already holds NLL(m)); None -> evaluate here
     max_backtracks: int = 30,
     b: float = 0.5,
     sigma: float = 0.01,
     gamma: float = 0.0,
     delta: float = 1e-3,
 ) -> LineSearchResult:
-    f0 = f_alpha(0.0, m, dm, y, beta, dbeta, lam)
+    if f0 is None:
+        f0 = f_alpha(0.0, m, dm, y, beta, dbeta, lam)
     D = armijo_D(grad_dot_dbeta, quad_term, beta, dbeta, lam, gamma)
     f1 = f_alpha(1.0, m, dm, y, beta, dbeta, lam)
 

@@ -4,8 +4,9 @@ All functions work from the *margin cache* m_i = beta^T x_i — the paper's
 O(n) state (it stores exp(beta^T x_i)); every line-search/objective
 evaluation is O(n + p), never a pass over X.
 
-Conventions: y in {-1, +1}; X dense (n, p) float32 (sparse data is densified
-per feature tile by the pipeline — see DESIGN.md §2.3 on TPU adaptation).
+Conventions: y in {-1, +1}; X dense (n, p) float32 (sparse data stays in
+by-feature slab form end-to-end — kernels/sparse_slab.py computes the
+tile statistics without densifying; see DESIGN.md §2.3 on TPU adaptation).
 """
 from __future__ import annotations
 

@@ -37,6 +37,7 @@ from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dglmnet import DGLMNETOptions, FitResult, fit
 from repro.core.distributed import (
@@ -55,7 +56,7 @@ from repro.core.screening import (
     scatter_columns,
     strong_rule_mask,
 )
-from repro.data.byfeature import ByFeature, gather_features, scatter_features
+from repro.data.byfeature import ByFeature, SlabBuckets, scatter_features
 
 
 @dataclass
@@ -218,14 +219,21 @@ def regularization_path_distributed(
     (Algorithm 5 run distributed — the paper's webspam-scale regime).
 
     ``data`` is either a dense (n, p) X (restricted solves are
-    ``fit_distributed``), a :class:`~repro.data.byfeature.ByFeature`, or a
+    ``fit_distributed``), a :class:`~repro.data.byfeature.ByFeature`, a
     pre-built ``(row_idx, values)`` slab pair of shape (p, DP, K) with
-    local row indices (restricted solves are ``fit_distributed_sparse``).
-    In the sparse forms the strong-rule/KKT gradient passes stream the
-    slabs under shard_map (``core.screening.make_sparse_screen``) and the
-    active-set gather/scatter operates on slabs
+    local row indices, or an nnz-bucketed
+    :class:`~repro.data.byfeature.SlabBuckets` layout (restricted solves
+    are ``fit_distributed_sparse``). In the sparse forms the
+    strong-rule/KKT gradient passes stream the slabs under shard_map
+    (``core.screening.make_sparse_screen``, per capacity class when
+    bucketed) and the active-set gather/scatter operates on slabs
     (``data.byfeature.gather_features``), so no dense (n, p) X is ever
-    materialized — neither on host nor on any device.
+    materialized on host. Restricted solves additionally trim the slab
+    capacity axis to the working set's own power-of-two K class
+    (``data.byfeature.k_class``): light working sets stop paying the
+    power-law head's global max-nnz padding, and sufficiently sparse ones
+    drop into the sparse-native slab kernels
+    (``kernels.slab_gram``/``slab_spmv``) instead of densifying.
 
     The active-set gather is the feature-axis reshard: the working set's
     columns/slabs are packed into a capacity-bucketed P(model) layout
@@ -244,6 +252,7 @@ def regularization_path_distributed(
     cap_tile = mdim * opts.tile
     n = y.shape[0]
 
+    known_packed = not isinstance(data, tuple)   # our own builders pack
     if isinstance(data, ByFeature):
         from repro.data.byfeature import to_slabs
 
@@ -252,39 +261,105 @@ def regularization_path_distributed(
         row_idx, values, _ = to_slabs(data, ddim)
         data = (row_idx, values)
 
-    sparse = isinstance(data, tuple)
-    if sparse:
+    if isinstance(data, tuple):
+        # a flat (row_idx, values) pair is exactly a one-bucket layout;
+        # wrapping it keeps a single screened sparse driver below (the
+        # per-bucket loop runs the full shape/row-range validation)
         row_idx, values = data
-        n_loc = check_slab_shapes(row_idx, values, mesh, n)
-        p = row_idx.shape[0]
-        # pad the feature axis once so the streaming screen's tile walk and
-        # every capacity bucket stay mesh-aligned; all-sentinel slabs have
-        # zero gradient and zero coefficient, so they are never admitted
-        pad = (-p) % cap_tile
-        if pad:
-            row_idx = jnp.pad(row_idx, ((0, pad), (0, 0), (0, 0)),
-                              constant_values=n_loc)
-            values = jnp.pad(values, ((0, pad), (0, 0), (0, 0)))
-        p_work = p + pad
+        n_loc_flat = n // max(ddim, 1)
+        if known_packed:
+            front_packed = True
+        else:
+            # user-built slabs may interleave sentinel and live slots
+            # (nothing before this PR required packing); the k_cap trim
+            # slices the K axis positionally, so only front-packed slabs
+            # (what to_slabs emits) are eligible — otherwise solve at the
+            # full capacity
+            valid = row_idx < n_loc_flat
+            front_packed = bool(jnp.all(valid[..., 1:] <= valid[..., :-1]))
+        data = SlabBuckets(
+            buckets=((row_idx, values,
+                      np.arange(row_idx.shape[0], dtype=np.int64)),),
+            n_loc=n_loc_flat, p=row_idx.shape[0])
+    else:
+        # to_slab_buckets front-packs by construction; hand-built
+        # SlabBuckets must honor the invariant documented on the class
+        front_packed = True
+
+    sparse = isinstance(data, SlabBuckets)
+    to_output = None                   # work-axis beta -> original order
+    if sparse:
+        from repro.data.byfeature import gather_features_buckets, k_class
+
+        slabs: SlabBuckets = data
         slab_sharding = NamedSharding(mesh, P("model", daxes, None))
         vsharding = NamedSharding(mesh, P(daxes))
-        row_idx = jax.device_put(row_idx, slab_sharding)
-        values = jax.device_put(values, slab_sharding)
+        n_loc = slabs.n_loc
+        work_buckets = []
+        feat_map_parts = []
+        k_arr_parts = []
+        for r_b, v_b, fid in slabs.buckets:
+            if check_slab_shapes(r_b, v_b, mesh, n) != n_loc:
+                raise ValueError("bucket n_loc inconsistent with mesh/n")
+            # pad each bucket's feature axis so the streaming screen's
+            # tile walk and every capacity bucket stay mesh-aligned;
+            # all-sentinel slabs have zero gradient and are never admitted
+            pad_b = (-r_b.shape[0]) % cap_tile
+            if pad_b:
+                r_b = jnp.pad(r_b, ((0, pad_b), (0, 0), (0, 0)),
+                              constant_values=n_loc)
+                v_b = jnp.pad(v_b, ((0, pad_b), (0, 0), (0, 0)))
+            # k per feature on host *before* the slabs land sharded (and
+            # feature-axis concats below stay off-mesh: concatenating
+            # P(model)-sharded pieces of different lengths miscompiles on
+            # current JAX, so per-bucket screen outputs are resharded to
+            # replicated first — they are O(p) vectors the driver's
+            # elementwise mask math wants replicated anyway)
+            k_arr_parts.append(
+                np.asarray((r_b < n_loc).sum(axis=-1).max(axis=-1)))
+            r_b = jax.device_put(r_b, slab_sharding)
+            v_b = jax.device_put(v_b, slab_sharding)
+            work_buckets.append((r_b, v_b, fid))
+            feat_map_parts.append(np.concatenate([
+                np.asarray(fid, np.int32),
+                np.full(pad_b, slabs.p, np.int32)]))
+        slabs_work = SlabBuckets(tuple(work_buckets), n_loc, slabs.p)
+        p = slabs.p
+        p_work = sum(b[0].shape[0] for b in work_buckets)
+        feat_map = jnp.asarray(np.concatenate(feat_map_parts))  # sentinel p
+        k_arr = jnp.asarray(np.concatenate(k_arr_parts))
+        k_max = max(slabs_work.k_classes)
         y = jax.device_put(y, vsharding)
         screen_fn = make_sparse_screen(mesh, n_loc, opts.tile)
+        rsharding = NamedSharding(mesh, P())
 
         def grad_abs(m_cur):
-            return screen_fn(row_idx, values, y, m_cur)
+            return jnp.concatenate([
+                jax.device_put(screen_fn(r_b, v_b, y, m_cur), rsharding)
+                for r_b, v_b, _ in work_buckets])
 
         def make_restricted_solve(lam):
             def restricted_solve(mask, cap, beta_cur):
-                rows_sub, vals_sub, beta_sub, idx = gather_features(
-                    row_idx, values, beta_cur, mask, cap, sentinel=n_loc)
+                # slab-capacity class of this working set: heavy features
+                # only make a solve pay for K they actually carry
+                if front_packed:
+                    k_need = int(jnp.max(jnp.where(mask, k_arr, 0)))
+                    k_cap = k_class(k_need, k_max)
+                else:
+                    k_cap = k_max
+                rows_sub, vals_sub, beta_sub, idx = gather_features_buckets(
+                    slabs_work, beta_cur, mask, cap, k_cap)
                 res = fit_distributed_sparse(
                     rows_sub, vals_sub, y, lam, mesh, beta0=beta_sub,
                     opts=opts)
                 return res, scatter_features(res.beta, idx, p_work), res.m
             return restricted_solve
+
+        def to_output(beta_work):
+            # bucket-permuted work axis -> original feature ids (padding
+            # rows dropped via the sentinel-p scatter)
+            return jnp.zeros(p, beta_work.dtype).at[feat_map].set(
+                beta_work, mode="drop")
 
         m = jax.device_put(jnp.zeros(n, jnp.float32), vsharding)
         # at beta = 0 the NLL gradient is -0.5 * X^T y, so the sparse
@@ -326,7 +401,7 @@ def regularization_path_distributed(
             kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
         )
         lam_prev = lam
-        beta_out = beta[:p]
+        beta_out = to_output(beta) if to_output is not None else beta[:p]
         nnz = int(jnp.sum(jnp.abs(beta_out) > 0))
         f = float(res.f) if res.n_iters else float(objective(m, y, beta, lam))
         metrics = eval_fn(beta_out) if eval_fn else {}

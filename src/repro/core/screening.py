@@ -41,15 +41,14 @@ def _nll_residual(m, y):
 def nll_grad_abs_sparse(row_idx, values, y, m) -> jnp.ndarray:
     """Sparse-native |g_j| over a by-feature layout (paper Table 1).
 
-    ``row_idx``/``values`` are (p, K) with sentinel row index n; the pass is
-    a pure gather-reduce over the slabs — g_j = |sum_k v[row_idx[j,k]] *
-    values[j,k]| with v padded by one zero to swallow sentinels — so a dense
-    (n, p) X is never materialized. Memory is O(nnz), the size of the slabs
-    themselves.
+    ``row_idx``/``values`` are (p, K) with sentinel row index n; the pass
+    is the kernel layer's slab correlation ``X^T v`` (a pure gather-reduce
+    over the slabs, sentinel slots exact zero) — a dense (n, p) X is never
+    materialized. Memory is O(nnz), the size of the slabs themselves.
     """
-    v = _nll_residual(m, y)
-    v_pad = jnp.concatenate([v, jnp.zeros(1, v.dtype)])
-    return jnp.abs(jnp.sum(values * v_pad[row_idx], axis=-1))
+    from repro.kernels.ops import slab_corr
+
+    return jnp.abs(slab_corr(row_idx, values, _nll_residual(m, y)))
 
 
 @jax.jit
@@ -158,6 +157,8 @@ def make_sparse_screen(mesh: Mesh, n_loc: int, tile: int,
         out_specs=P(model_axis),
     )
     def screen(row_idx, values, y, m):
+        from repro.kernels.ops import slab_corr
+
         rows, vals = row_idx[:, 0, :], values[:, 0, :]
         p_loc, k = rows.shape
         assert p_loc % tile == 0, (
@@ -165,12 +166,11 @@ def make_sparse_screen(mesh: Mesh, n_loc: int, tile: int,
             f"tile={tile} (pad the slabs upstream)"
         )
         v = _nll_residual(m, y)
-        v_pad = jnp.concatenate([v, jnp.zeros(1, v.dtype)])
 
         def tile_pass(_, i):
             rt = jax.lax.dynamic_slice(rows, (i * tile, 0), (tile, k))
             vt = jax.lax.dynamic_slice(vals, (i * tile, 0), (tile, k))
-            return None, jnp.sum(vt * v_pad[rt], axis=-1)
+            return None, slab_corr(rt, vt, v)
 
         _, g = jax.lax.scan(tile_pass, None, jnp.arange(p_loc // tile))
         g = g.reshape(p_loc)

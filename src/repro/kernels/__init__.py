@@ -1,1 +1,9 @@
-from repro.kernels.ops import flash_attention, gram_cd, logistic_stats  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    flash_attention,
+    gram_cd,
+    logistic_stats,
+    prefer_slab_gram,
+    slab_corr,
+    slab_gram,
+    slab_spmv,
+)

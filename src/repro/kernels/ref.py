@@ -29,6 +29,33 @@ def logistic_stats_ref(m, y):
     return w, z, nll
 
 
+def _densify_slab(rows, vals, n_loc: int):
+    """Slab (T, K) -> dense (n_loc, T) via the scatter the kernels kill.
+    Sentinel slots (row >= n_loc) land in the swallow row and are dropped;
+    duplicate rows within a feature sum, defining the oracle semantics the
+    sparse kernels must match."""
+    t, k = rows.shape
+    out = jnp.zeros((n_loc + 1, t), jnp.float32)
+    cols = jnp.broadcast_to(jnp.arange(t)[:, None], rows.shape)
+    safe = jnp.minimum(rows, n_loc)
+    out = out.at[safe.reshape(-1), cols.reshape(-1)].add(
+        jnp.where(rows < n_loc, vals, 0.0).reshape(-1).astype(jnp.float32))
+    return out[:n_loc]
+
+
+def slab_gram_ref(rows, vals, w, r):
+    """Oracle for kernels.slab_gram: densify, then the dense weighted Gram
+    G = X_F^T diag(w) X_F and correlation c = X_F^T (w r)."""
+    xf = _densify_slab(rows, vals, w.shape[0])
+    wxf = w.astype(jnp.float32)[:, None] * xf
+    return xf.T @ wxf, wxf.T @ r.astype(jnp.float32)
+
+
+def slab_spmv_ref(rows, vals, d, n_loc: int):
+    """Oracle for kernels.slab_spmv: densify, then X_F @ d."""
+    return _densify_slab(rows, vals, n_loc) @ d.astype(jnp.float32)
+
+
 def flash_attention_ref(q, k, v, *, causal=True):
     """Oracle for kernels.flash_attention: plain softmax attention."""
     b, s, h, d = q.shape

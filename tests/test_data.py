@@ -116,6 +116,119 @@ def test_gather_scatter_features_roundtrip():
                                np.asarray(jnp.where(mask, beta, 0.0)))
 
 
+def test_to_slab_buckets_partitions_and_reassembles():
+    """Bucketed slabs: every feature lands in exactly one capacity class,
+    classes are power-of-two (capped at the global max), and reassembling
+    all buckets recovers the dense matrix."""
+    from repro.data.byfeature import to_slab_buckets
+
+    rng = np.random.default_rng(9)
+    # power-law-ish nnz: a few heavy features, many light ones
+    n, p = 48, 15
+    X = np.zeros((n, p), np.float32)
+    for j in range(p):
+        k = 40 if j < 2 else int(rng.integers(1, 5))
+        rows = rng.choice(n, size=min(k, n), replace=False)
+        X[rows, j] = rng.standard_normal(len(rows))
+    bf = to_by_feature(X)
+    slabs = to_slab_buckets(bf, 4, k_min=2)
+    assert slabs.n_loc == 12 and slabs.p == p
+    all_feats = np.sort(slabs.feat_order)
+    np.testing.assert_array_equal(all_feats, np.arange(p))
+    ks = slabs.k_classes
+    assert list(ks) == sorted(ks)
+    k_global = max(int((np.asarray(bf.row_idx[j]) < n).sum()) for j in range(p))
+    for r_b, v_b, fid in slabs.buckets:
+        kb = r_b.shape[2]
+        assert kb <= 12 and (kb & (kb - 1) == 0 or kb == ks[-1])
+    # storage actually shrinks vs the single global capacity
+    single_cells = p * 4 * max(ks)
+    bucket_cells = sum(b[0].shape[0] * 4 * b[0].shape[2] for b in slabs.buckets)
+    assert bucket_cells < single_cells
+    dense = np.zeros((n, p), np.float32)
+    for r_b, v_b, fid in slabs.buckets:
+        ri, vv = np.asarray(r_b), np.asarray(v_b)
+        for bj, j in enumerate(np.asarray(fid)):
+            for s in range(4):
+                live = ri[bj, s] < slabs.n_loc
+                dense[s * slabs.n_loc + ri[bj, s][live], j] = vv[bj, s][live]
+    np.testing.assert_allclose(dense, X, atol=0)
+
+
+def test_k_class_ladder():
+    from repro.data.byfeature import k_class
+
+    assert k_class(0, 100) == 8
+    assert k_class(8, 100) == 8
+    assert k_class(9, 100) == 16
+    assert k_class(17, 100) == 32
+    assert k_class(90, 100) == 100      # capped at the global max
+    assert k_class(3, 5, k_min=2) == 4
+    assert k_class(2, 5, k_min=2) == 2
+
+
+def test_gather_features_k_cap_trim():
+    """k_cap trimming relies on front-packed entries: the trimmed gather
+    must equal the full gather whenever k_cap covers the active features'
+    nnz, and pad with sentinels when k_cap exceeds the stored K."""
+    import jax.numpy as jnp
+
+    from repro.data.byfeature import gather_features
+
+    X = _rand_sparse(n=16, p=12, seed=6)
+    bf = to_by_feature(X)
+    k = bf.row_idx.shape[1]
+    beta = jnp.zeros(12)
+    mask = jnp.asarray([True] + [False] * 11)
+    nnz0 = int((np.asarray(bf.row_idx[0]) < 16).sum())
+    full = gather_features(bf.row_idx, bf.values, beta, mask, cap=4,
+                           sentinel=bf.n)
+    trim = gather_features(bf.row_idx, bf.values, beta, mask, cap=4,
+                           sentinel=bf.n, k_cap=nnz0)
+    assert trim[0].shape == (4, nnz0)
+    np.testing.assert_array_equal(np.asarray(trim[0]),
+                                  np.asarray(full[0][:, :nnz0]))
+    np.testing.assert_allclose(np.asarray(trim[1]),
+                               np.asarray(full[1][:, :nnz0]))
+    grow = gather_features(bf.row_idx, bf.values, beta, mask, cap=4,
+                           sentinel=bf.n, k_cap=k + 3)
+    assert grow[0].shape == (4, k + 3)
+    assert np.all(np.asarray(grow[0][:, k:]) == bf.n)
+    assert np.all(np.asarray(grow[1][:, k:]) == 0.0)
+
+
+def test_gather_features_buckets_matches_flat_gather():
+    """The per-bucket gather-and-combine equals gathering from the
+    equivalent single-capacity slab layout."""
+    import jax.numpy as jnp
+
+    from repro.data.byfeature import (
+        SlabBuckets, gather_features, gather_features_buckets,
+        to_slab_buckets, to_slabs,
+    )
+
+    X = _rand_sparse(n=24, p=10, seed=7)
+    bf = to_by_feature(X)
+    slabs = to_slab_buckets(bf, 2, k_min=2)
+    row_idx, values, n_loc = to_slabs(bf, 2)
+    k = row_idx.shape[2]
+    # flat layout permuted into bucket order = the buckets' view
+    perm = slabs.feat_order
+    rows_flat = jnp.asarray(np.asarray(row_idx)[perm])
+    vals_flat = jnp.asarray(np.asarray(values)[perm])
+    rng = np.random.default_rng(0)
+    mask = jnp.asarray(rng.random(10) < 0.5)
+    beta = jnp.asarray(rng.standard_normal(10), dtype=jnp.float32)
+    rb, vb, bb, idxb = gather_features_buckets(slabs, beta, mask, cap=8,
+                                               k_cap=k)
+    rf, vf, bf_sub, idxf = gather_features(rows_flat, vals_flat, beta, mask,
+                                           cap=8, sentinel=n_loc, k_cap=k)
+    np.testing.assert_array_equal(np.asarray(idxb), np.asarray(idxf))
+    np.testing.assert_array_equal(np.asarray(rb), np.asarray(rf))
+    np.testing.assert_allclose(np.asarray(vb), np.asarray(vf))
+    np.testing.assert_allclose(np.asarray(bb), np.asarray(bf_sub))
+
+
 def test_partition_features_covers_all():
     parts = partition_features(103, 16)
     allidx = np.concatenate(parts)

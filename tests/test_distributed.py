@@ -183,6 +183,119 @@ def test_distributed_sparse_regpath_matches_single_process():
     assert "OK" in r.stdout
 
 
+def test_sparse_fit_densify_fallback_equivalence():
+    """fit_distributed_sparse must produce the same solve whether the
+    nnz-density heuristic picks the sparse-native slab kernels or the
+    once-per-solve on-mesh densify fallback — and both must match the
+    dense fit. Low density so the slab-native path is the natural one."""
+    r = _run("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.configs.base import GLMConfig
+        from repro.core import DGLMNETOptions, fit, lambda_max
+        from repro.core.distributed import fit_distributed_sparse
+        from repro.data.byfeature import to_by_feature, to_slabs
+        from repro.data.synthetic import make_glm_dataset
+        from repro.launch.mesh import make_dev_mesh
+
+        cfg = GLMConfig(name='fb', num_examples=2048, num_features=64,
+                        density=0.005)
+        ds = make_glm_dataset(cfg, jax.random.key(8))
+        X, y = ds.X_train, ds.y_train
+        n = (X.shape[0] // 2) * 2
+        X, y = X[:n], y[:n]
+        lam = float(lambda_max(X, y)) / 16
+        opts = DGLMNETOptions(tile=16, max_iters=30)
+        mesh = make_dev_mesh(2, 4)
+        row_idx, values, n_loc = to_slabs(to_by_feature(X), 2)
+        from repro.kernels.ops import prefer_slab_gram
+        assert prefer_slab_gram(n_loc, row_idx.shape[2]), (
+            'density too high for the slab-native regime', row_idx.shape)
+
+        ref = fit(X, y, lam, opts=opts)
+        res_auto = fit_distributed_sparse(row_idx, values, y, lam, mesh,
+                                          opts=opts)
+        res_sparse = fit_distributed_sparse(row_idx, values, y, lam, mesh,
+                                            opts=opts, densify=False)
+        res_dense = fit_distributed_sparse(row_idx, values, y, lam, mesh,
+                                           opts=opts, densify=True)
+        for res in (res_auto, res_sparse, res_dense):
+            assert abs(res.f - ref.f) / abs(ref.f) < 1e-4, (res.f, ref.f)
+            np.testing.assert_allclose(np.asarray(res.beta),
+                                       np.asarray(ref.beta),
+                                       rtol=1e-2, atol=1e-3)
+        # the two mesh paths solve the *same* block partition: bitwise-tight
+        np.testing.assert_allclose(np.asarray(res_sparse.beta),
+                                   np.asarray(res_dense.beta),
+                                   rtol=1e-5, atol=1e-6)
+        print('OK densify fallback equivalence')
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+def test_bucketed_regpath_matches_single_process():
+    """The distributed screened path over the nnz-bucketed SlabBuckets
+    layout == the single-process screened path per lambda, with betas
+    mapped back to the original feature order."""
+    r = _run("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.configs.base import GLMConfig
+        from repro.core import (DGLMNETOptions, regularization_path,
+                                regularization_path_distributed)
+        from repro.data.byfeature import to_by_feature, to_slab_buckets
+        from repro.data.synthetic import make_glm_dataset
+        from repro.launch.mesh import make_dev_mesh
+
+        cfg = GLMConfig(name='bk', num_examples=1024, num_features=96,
+                        density=0.08)
+        ds = make_glm_dataset(cfg, jax.random.key(11))
+        X, y = ds.X_train, ds.y_train
+        n = (X.shape[0] // 2) * 2
+        X, y = X[:n], y[:n]
+        opts = DGLMNETOptions(num_blocks=4, tile=16, max_iters=60,
+                              rel_tol=1e-7)
+        mesh = make_dev_mesh(2, 4)
+        slabs = to_slab_buckets(to_by_feature(X), 2)
+        assert len(slabs.buckets) >= 2, 'want multiple K classes'
+        pts_ref = regularization_path(X, y, path_len=5, opts=opts,
+                                      screen=True)
+        pts = regularization_path_distributed(slabs, y, mesh, path_len=5,
+                                              opts=opts)
+        for pr, pb in zip(pts_ref, pts):
+            rel = abs(pb.f - pr.f) / max(abs(pr.f), 1e-9)
+            assert rel < 1e-4, (pb.lam, pb.f, pr.f)
+            np.testing.assert_allclose(np.asarray(pb.beta),
+                                       np.asarray(pr.beta),
+                                       rtol=1e-2, atol=1e-3)
+
+        # pre-built slabs with sentinel slots interleaved among live ones
+        # (legal input; nothing ever promised front-packing): the K-trim
+        # must be disabled, not silently drop live entries
+        from repro.data.byfeature import to_slabs
+        row_idx, values, n_loc = to_slabs(to_by_feature(X), 2)
+        ri, vv = np.array(row_idx), np.array(values)
+        rng = np.random.default_rng(0)
+        for j in range(ri.shape[0]):
+            for s in range(ri.shape[1]):
+                perm = rng.permutation(ri.shape[2])
+                ri[j, s], vv[j, s] = ri[j, s][perm], vv[j, s][perm]
+        pts_shuf = regularization_path_distributed(
+            (jnp.asarray(ri), jnp.asarray(vv)), y, mesh, path_len=5,
+            opts=opts)
+        for pr, pb in zip(pts_ref, pts_shuf):
+            assert abs(pb.f - pr.f) / max(abs(pr.f), 1e-9) < 1e-4, (
+                pb.lam, pb.f, pr.f)
+            np.testing.assert_allclose(np.asarray(pb.beta),
+                                       np.asarray(pr.beta),
+                                       rtol=1e-2, atol=1e-3)
+        print('OK bucketed path')
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
 @pytest.mark.slow
 def test_distributed_dense_regpath_matches_single_process():
     """Dense-X flavor of the distributed screened path: restricted solves

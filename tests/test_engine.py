@@ -149,7 +149,8 @@ def test_make_step_matches_manual_iteration(small_glm):
     beta = jnp.zeros(X.shape[1], jnp.float32)
     m = margins(X, beta)
 
-    step = engine.make_step(lambda X, y, b, mm, l: _iteration(X, y, b, mm, l, opts))
+    step = engine.make_step(
+        lambda X, y, b, mm, l, w, z: _iteration(X, y, b, mm, l, opts, w, z))
     b1, m1, f1, a1 = step(X, y, beta, m, lam)
 
     dbeta, dm, gd = dglmnet_iteration(X, y, beta, m, lam, opts)

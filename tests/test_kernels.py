@@ -4,8 +4,38 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import ops
 from repro.kernels.ops import gram_cd, logistic_stats
-from repro.kernels.ref import gram_cd_ref, logistic_stats_ref
+from repro.kernels.ref import (
+    gram_cd_ref,
+    logistic_stats_ref,
+    slab_gram_ref,
+    slab_spmv_ref,
+)
+from repro.kernels.sparse_slab import slab_gram_pallas, slab_spmv_pallas
+
+
+def make_slab(t, k, n_loc, seed, *, duplicates=False, empty_every=0,
+              adversarial_pad=False):
+    """Ragged random slab: per-feature nnz in [1, k], sorted local rows,
+    sentinel padding; optionally duplicate rows within a feature, fully
+    empty features, and garbage values parked on sentinel slots."""
+    rng = np.random.default_rng(seed)
+    rows = np.full((t, k), n_loc, np.int32)
+    vals = np.zeros((t, k), np.float32)
+    for f in range(t):
+        if empty_every and f % empty_every == 0:
+            continue
+        kk = int(rng.integers(1, k + 1))
+        rr = rng.integers(0, n_loc, size=kk)
+        if not duplicates:
+            rr = np.unique(rr)
+            kk = len(rr)
+        rows[f, :kk] = np.sort(rr)
+        vals[f, :kk] = rng.standard_normal(kk)
+    if adversarial_pad:
+        vals[rows >= n_loc] = 99.0   # must contribute exactly zero anyway
+    return jnp.asarray(rows), jnp.asarray(vals)
 
 
 @pytest.mark.parametrize("f", [8, 32, 128, 256, 512])
@@ -55,15 +85,21 @@ def test_gram_cd_soft_threshold_zeroing():
 @pytest.mark.parametrize("n,block", [(64, 32), (1000, 256), (8192, 1024),
                                      (5000, 4096)])
 def test_logistic_stats_sweep(n, block):
+    from repro.kernels.logistic_stats import logistic_stats_pallas
+
     key = jax.random.key(n)
     k1, k2 = jax.random.split(key)
     m = 4.0 * jax.random.normal(k1, (n,))
     y = jnp.sign(jax.random.normal(k2, (n,)))
-    w1, z1, nll1 = logistic_stats(m, y, block=block)
     w2, z2, nll2 = logistic_stats_ref(m, y)
-    np.testing.assert_allclose(w1, w2, rtol=1e-6)
-    np.testing.assert_allclose(z1, z2, rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(nll1, nll2, rtol=1e-5)
+    # the dispatch wrapper (fused jnp on CPU) and the Pallas kernel
+    # (interpret mode) must both match the oracle
+    for w1, z1, nll1 in (logistic_stats(m, y, block=block),
+                         logistic_stats_pallas(m, y, block=block,
+                                               interpret=True)):
+        np.testing.assert_allclose(w1, w2, rtol=1e-6)
+        np.testing.assert_allclose(z1, z2, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(nll1, nll2, rtol=1e-5)
 
 
 def test_logistic_stats_extreme_margins():
@@ -74,6 +110,113 @@ def test_logistic_stats_extreme_margins():
     assert np.isfinite(np.asarray(w)).all()
     assert np.isfinite(np.asarray(z)).all()
     assert np.isfinite(float(nll))
+
+
+# ---------------------------------------------------------------------------
+# sparse slab suite
+# ---------------------------------------------------------------------------
+
+# non-128-multiple tiles, ragged nnz, duplicates, empty features, and a
+# local example count smaller than the slab capacity all included
+SLAB_CASES = [
+    dict(t=8, k=4, n_loc=16, seed=0),
+    dict(t=24, k=5, n_loc=40, seed=1, duplicates=True),
+    dict(t=128, k=8, n_loc=256, seed=2, duplicates=True, empty_every=5),
+    dict(t=16, k=6, n_loc=7, seed=3, duplicates=True, empty_every=4),
+    dict(t=48, k=3, n_loc=100, seed=4, adversarial_pad=True),
+]
+
+
+@pytest.mark.parametrize("case", SLAB_CASES)
+def test_slab_gram_dispatch_matches_ref(case):
+    rows, vals = make_slab(**case)
+    n_loc = case["n_loc"]
+    key = jax.random.key(case["seed"])
+    w = jnp.abs(jax.random.normal(key, (n_loc,))) * 0.2 + 0.01
+    r = jax.random.normal(jax.random.fold_in(key, 1), (n_loc,))
+    G_ref, c_ref = slab_gram_ref(rows, vals, w, r)
+    G, c = ops.slab_gram(rows, vals, w, r)
+    np.testing.assert_allclose(G, G_ref, atol=1e-4)
+    np.testing.assert_allclose(c, c_ref, atol=1e-4)
+
+
+@pytest.mark.parametrize("case", SLAB_CASES)
+def test_slab_gram_pallas_matches_ref(case):
+    rows, vals = make_slab(**case)
+    n_loc = case["n_loc"]
+    key = jax.random.key(case["seed"] + 100)
+    w = jnp.abs(jax.random.normal(key, (n_loc,))) * 0.2 + 0.01
+    r = jax.random.normal(jax.random.fold_in(key, 1), (n_loc,))
+    G_ref, c_ref = slab_gram_ref(rows, vals, w, r)
+    safe, va, wv, cva = ops._sentinel_zeroed(rows, vals, w, r, n_loc)
+    G, c = slab_gram_pallas(safe, wv, va, cva, interpret=True)
+    np.testing.assert_allclose(G, G_ref, atol=1e-4)
+    np.testing.assert_allclose(c, c_ref, atol=1e-4)
+
+
+@pytest.mark.parametrize("case", SLAB_CASES)
+@pytest.mark.parametrize("block", [8, 64])
+def test_slab_spmv_matches_ref(case, block):
+    rows, vals = make_slab(**case)
+    n_loc = case["n_loc"]
+    d = jax.random.normal(jax.random.key(case["seed"] + 7), (case["t"],))
+    out_ref = slab_spmv_ref(rows, vals, d, n_loc)
+    out = ops.slab_spmv(rows, vals, d, n_loc=n_loc)
+    np.testing.assert_allclose(out, out_ref, atol=1e-4)
+    dv = jnp.where(rows < n_loc, vals, 0.0) * d[:, None]
+    out_p = slab_spmv_pallas(jnp.minimum(rows, n_loc), dv, n_loc=n_loc,
+                             block=block, interpret=True)
+    np.testing.assert_allclose(out_p, out_ref, atol=1e-4)
+
+
+@pytest.mark.parametrize("case", SLAB_CASES)
+def test_slab_corr_matches_ref(case):
+    rows, vals = make_slab(**case)
+    n_loc = case["n_loc"]
+    v = jax.random.normal(jax.random.key(case["seed"] + 13), (n_loc,))
+    # X^T v == slab_gram's c with w = 1, r = v
+    _, c_ref = slab_gram_ref(rows, vals, jnp.ones(n_loc), v)
+    np.testing.assert_allclose(ops.slab_corr(rows, vals, v), c_ref,
+                               atol=1e-4)
+
+
+def test_slab_sentinel_ghost_weight_regression():
+    """Sentinel slots must contribute *exactly* zero to G/c/SpMV for every
+    slab capacity — including all-padding (empty-feature) slabs. A clamped
+    gather without the validity mask would silently add row ``n_loc - 1``'s
+    (or, with a one-row pad, row ``n_loc``'s) weight for every padding
+    slot; park large values on the padding to make any leak visible."""
+    n_loc = 6
+    w = jnp.arange(1.0, n_loc + 1)          # distinctive per-row weights
+    r = jnp.arange(1.0, n_loc + 1) * 10.0
+    for k in (1, 2, 5, 9):                   # several capacity classes
+        rows = jnp.full((4, k), n_loc, jnp.int32)   # all-padding slab
+        vals = jnp.full((4, k), 123.0)               # adversarial values
+        G, c = ops.slab_gram(rows, vals, w, r)
+        assert float(jnp.abs(G).max()) == 0.0, k
+        assert float(jnp.abs(c).max()) == 0.0, k
+        out = ops.slab_spmv(rows, vals, jnp.ones(4), n_loc=n_loc)
+        assert float(jnp.abs(out).max()) == 0.0, k
+        assert float(jnp.abs(ops.slab_corr(rows, vals, r)).max()) == 0.0, k
+    # mixed live/padding: the padded tail of a live feature leaks nothing
+    rows = jnp.asarray([[2, n_loc, n_loc]], jnp.int32)
+    vals = jnp.asarray([[1.5, 50.0, -50.0]])
+    G, c = ops.slab_gram(rows, vals, w, r)
+    np.testing.assert_allclose(G, jnp.asarray([[w[2] * 1.5 * 1.5]]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(c, jnp.asarray([w[2] * r[2] * 1.5]),
+                               rtol=1e-6)
+
+
+def test_backend_probe_cached():
+    """The backend probe must be evaluated at most once per process (it
+    used to re-query jax.default_backend() inside traced loops)."""
+    ops._on_tpu.cache_clear()
+    ops.interpret_default.cache_clear()
+    ops.interpret_default()
+    ops.interpret_default()
+    assert ops.interpret_default.cache_info().misses == 1
+    assert ops._on_tpu.cache_info().misses <= 1
 
 
 @pytest.mark.parametrize("shape,blocks", [

@@ -84,6 +84,79 @@ def test_nll_nonnegative_and_margin_monotone(seed):
     assert nll2 <= nll + 1e-5
 
 
+@st.composite
+def slab_cases(draw):
+    """Random ragged slabs: duplicate rows within a feature, empty
+    features, sentinel padding, non-128-multiple tiles, and n_loc both
+    above and below the slab capacity."""
+    t = draw(st.integers(1, 24))
+    k = draw(st.integers(1, 8))
+    n_loc = draw(st.integers(1, 48))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    rows = np.full((t, k), n_loc, np.int32)
+    vals = np.zeros((t, k), np.float32)
+    for f in range(t):
+        kk = int(rng.integers(0, k + 1))      # 0 -> empty feature
+        rows[f, :kk] = np.sort(rng.integers(0, n_loc, size=kk))
+        vals[f, :kk] = rng.standard_normal(kk)
+    return (jnp.asarray(rows), jnp.asarray(vals), n_loc,
+            jnp.asarray(np.abs(rng.standard_normal(n_loc)) + 0.01,
+                        dtype=jnp.float32),
+            jnp.asarray(rng.standard_normal(n_loc), dtype=jnp.float32),
+            jnp.asarray(rng.standard_normal(t), dtype=jnp.float32))
+
+
+@given(case=slab_cases())
+@settings(max_examples=30, deadline=None)
+def test_slab_gram_matches_densify_oracle(case):
+    """ops.slab_gram == the densify-based oracle over ragged/duplicate/
+    empty slabs — the sparse-native join must be exact, not approximate."""
+    from repro.kernels import ops
+    from repro.kernels.ref import slab_gram_ref
+
+    rows, vals, n_loc, w, r, _ = case
+    G_ref, c_ref = slab_gram_ref(rows, vals, w, r)
+    G, c = ops.slab_gram(rows, vals, w, r)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(G_ref), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), atol=2e-4)
+
+
+@given(case=slab_cases())
+@settings(max_examples=30, deadline=None)
+def test_slab_spmv_matches_densify_oracle(case):
+    from repro.kernels import ops
+    from repro.kernels.ref import slab_spmv_ref
+
+    rows, vals, n_loc, _, _, d = case
+    out = ops.slab_spmv(rows, vals, d, n_loc=n_loc)
+    out_ref = slab_spmv_ref(rows, vals, d, n_loc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               atol=2e-4)
+
+
+@given(case=slab_cases())
+@settings(max_examples=10, deadline=None)
+def test_slab_pallas_interpret_matches_oracle(case):
+    """The Pallas kernels themselves (interpret mode) on the same
+    hypothesis-generated slabs."""
+    from repro.kernels import ops
+    from repro.kernels.ref import slab_gram_ref, slab_spmv_ref
+    from repro.kernels.sparse_slab import slab_gram_pallas, slab_spmv_pallas
+
+    rows, vals, n_loc, w, r, d = case
+    G_ref, c_ref = slab_gram_ref(rows, vals, w, r)
+    safe, va, wv, cva = ops._sentinel_zeroed(rows, vals, w, r, n_loc)
+    G, c = slab_gram_pallas(safe, wv, va, cva, interpret=True)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(G_ref), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), atol=2e-4)
+    dv = jnp.where(rows < n_loc, vals, 0.0) * d[:, None]
+    out = slab_spmv_pallas(jnp.minimum(rows, n_loc), dv, n_loc=n_loc,
+                           block=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(slab_spmv_ref(rows, vals, d, n_loc)),
+                               atol=2e-4)
+
+
 @given(f=st.sampled_from([8, 16, 64]), seed=st.integers(0, 1000),
        lam=st.floats(0.0, 5.0))
 @settings(max_examples=25, deadline=None)
