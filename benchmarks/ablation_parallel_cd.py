@@ -1,11 +1,23 @@
 """Ablation: WHY the paper's design (sequential CD within blocks +
 block-diagonal Hessian across blocks + global line search) beats naive
 fully-parallel coordinate updates (Shotgun-style Jacobi, Bradley et al.
-2011 — the conflict problem the paper cites in §1).
+2011 — the conflict problem the paper cites in §1), and where the blocked
+semi-parallel cycle (PR 4) sits between the two.
 
-Reports iterations-to-tolerance and final objective gap vs the oracle for
-cyclic-within-block vs Jacobi updates, across block counts M and feature
-correlation levels.
+Three-way sweep reproducing the paper's §1 motivation figure:
+
+* **sequential** — the exact within-tile chain (``cd_cycle_gram_tile``);
+* **blocked-B** — B-wide proximal-Jacobi blocks applied sequentially with
+  the Gershgorin dominance safeguard (``cd_cycle_blocked_tile``),
+  B in {4, 8, 16, 32};
+* **jacobi** — all coordinates at once from one snapshot (Shotgun).
+
+Per (correlation rho, method) cell: iterations to reach the reference
+objective within tolerance, convergence flag, final relative gap, and
+warm wall-time per outer iteration. On weakly correlated data every
+method matches; as rho grows, full Jacobi conflicts (gap blows up or the
+line search strangles the step) while the safeguarded blocked cycle
+tracks the sequential chain at a fraction of its dependent steps.
 """
 from __future__ import annotations
 
@@ -13,7 +25,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Timer, emit
-from repro.core import DGLMNETOptions, fit, lambda_max, margins, objective
+from repro.core import DGLMNETOptions, fit, lambda_max
+
+TOL = 1e-4          # iterations-to-tolerance: rel gap vs reference optimum
 
 
 def correlated_dataset(key, n, p, rho):
@@ -29,10 +43,29 @@ def correlated_dataset(key, n, p, rho):
     return X, y
 
 
+def iters_to_tol(history, f_ref, tol=TOL):
+    """First outer iteration whose objective is within ``tol`` (relative)
+    of the reference optimum; -1 if the run never got there."""
+    for i, f in enumerate(history):
+        if (f - f_ref) / abs(f_ref) < tol:
+            return i
+    return -1
+
+
+def sweep_methods():
+    """The three-way method grid: label -> DGLMNETOptions overrides."""
+    grid = [("sequential", dict(method="gram"))]
+    for b in (4, 8, 16, 32):
+        grid.append((f"blocked-B{b}",
+                     dict(method="gram", cycle_mode="blocked", block=b)))
+    grid.append(("jacobi", dict(method="jacobi")))
+    return grid
+
+
 def run():
     key = jax.random.key(42)
     n, p = 4096, 256
-    print("# rho,method,M,iters,converged,final_gap")
+    print("# rho,method,M,iters,iters_to_tol,converged,final_gap,warm_ms_per_iter")
     for rho in (0.0, 0.5, 0.9):
         X, y = correlated_dataset(jax.random.fold_in(key, int(rho * 10)), n, p, rho)
         lam = float(lambda_max(X, y)) / 32
@@ -40,17 +73,20 @@ def run():
         ref = fit(X, y, lam, opts=DGLMNETOptions(num_blocks=1, method="gram",
                                                  tile=64, max_iters=200,
                                                  rel_tol=1e-10))
-        for method in ("gram", "jacobi"):
-            for m in (1, 16, 64):
+        for label, overrides in sweep_methods():
+            for m in (1, 16):
+                opts = DGLMNETOptions(num_blocks=m, tile=64, max_iters=150,
+                                      **overrides)
+                fit(X, y, lam, opts=opts)          # compile
                 with Timer() as t:
-                    res = fit(X, y, lam,
-                              opts=DGLMNETOptions(num_blocks=m, method=method,
-                                                  tile=64, max_iters=150))
+                    res = fit(X, y, lam, opts=opts)
                 gap = (res.f - ref.f) / abs(ref.f)
-                print(f"# {rho},{method},{m},{res.n_iters},{res.converged},{gap:.2e}")
-                emit(f"ablation.rho{rho}.{method}.M{m}",
-                     t.dt * 1e6 / max(res.n_iters, 1),
-                     f"iters={res.n_iters};gap={gap:.1e}")
+                itt = iters_to_tol(res.objective_history, ref.f)
+                per_iter_us = t.dt * 1e6 / max(res.n_iters, 1)
+                print(f"# {rho},{label},{m},{res.n_iters},{itt},"
+                      f"{res.converged},{gap:.2e},{per_iter_us / 1e3:.2f}")
+                emit(f"ablation.rho{rho}.{label}.M{m}", per_iter_us,
+                     f"iters={res.n_iters};to_tol={itt};gap={gap:.1e}")
 
 
 if __name__ == "__main__":

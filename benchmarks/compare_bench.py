@@ -12,6 +12,13 @@ Gated metrics (each applied only when present in *both* reports):
 * ``kernels.slab_*.speedup`` — sparse-native slab kernel vs the densify
   reference at matched shapes; the speedup may not collapse relative to
   baseline in the regimes where the slab kernel is the preferred path.
+* ``cycle.*`` — the blocked semi-parallel CD cycle: the per-tile
+  blocked-vs-sequential speedup may not collapse (the within-tile chain
+  re-serializing — this floor is the primary gate), the blocked path
+  must still land on the sequential path's objectives
+  (``max_rel_f_gap``, an absolute gate), and the blocked warm path gets
+  a wide catastrophic-only ratio gate (2x the normal one — it rides a
+  ~1s tiny measurement and would flap at the standard ratio).
 
 All time gates are ratios so the baseline only needs regenerating when
 shapes change:
@@ -78,7 +85,7 @@ def main() -> int:
     # a section present in the baseline but absent from the fresh report
     # means the bench stopped measuring it — that must fail, not silently
     # skip the gate (e.g. someone dropping --kernels from the CI lane)
-    for section in ("distributed", "kernels"):
+    for section in ("distributed", "kernels", "cycle"):
         if section in base and section not in fresh:
             print(f"FAIL: baseline has a '{section}' section but the fresh "
                   f"report does not — was the bench flag dropped?")
@@ -116,6 +123,43 @@ def main() -> int:
                 print(f"FAIL: {name} sparse-native speedup collapsed "
                       f"({fresh_row['speedup']:.2f}x < {floor:.2f}x) — did "
                       f"the densify come back?")
+                ok = False
+
+    if "cycle" in fresh and "cycle" in base:
+        fc, bc = fresh["cycle"], base["cycle"]
+        if fc.get("block") != bc.get("block"):
+            print("FAIL: cycle block size mismatch vs baseline")
+            ok = False
+        else:
+            # per-tile blocked-vs-sequential speedup: same capped floor as
+            # the slab gate — what matters is collapse toward 1x (the
+            # sequential chain back in the hot path), not timing jitter
+            floor = min(bc["per_tile"]["speedup"] / (args.max_ratio ** 2),
+                        1.1)
+            print(f"cycle per-tile: speedup fresh "
+                  f"{fc['per_tile']['speedup']:.2f}x vs baseline "
+                  f"{bc['per_tile']['speedup']:.2f}x (floor {floor:.2f}x)")
+            if fc["per_tile"]["speedup"] < floor:
+                print(f"FAIL: blocked per-tile speedup collapsed "
+                      f"({fc['per_tile']['speedup']:.2f}x < {floor:.2f}x) — "
+                      f"did the soft-threshold chain re-serialize?")
+                ok = False
+            # the warm path rides a ~1s tiny run and flaps under bursty CI
+            # load; the per-tile floor above is the re-serialization
+            # guard, so the path time only gets a wide catastrophic gate
+            # (2x the normal ratio)
+            ok &= _gate_time("blocked-cycle warm path",
+                             fc["path"]["warm_s"] / norm(fresh),
+                             bc["path"]["warm_s"] / norm(base),
+                             2 * args.max_ratio, unit)
+            # absolute objective gate: blocked is an acceleration of the
+            # sequential path, never an approximation of it
+            gap = fc["path"]["max_rel_f_gap"]
+            print(f"cycle objective gap vs sequential: {gap:.2e} "
+                  f"(gate 1e-3)")
+            if gap > 1e-3:
+                print(f"FAIL: blocked path objective diverged from the "
+                      f"sequential path (max rel gap {gap:.2e} > 1e-3)")
                 ok = False
 
     if not ok:

@@ -20,7 +20,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.subproblem import cd_cycle_gram_tile
+from repro.core.subproblem import (
+    blocked_cycle_modes,
+    cd_cycle_blocked_tile,
+    cd_cycle_gram_tile,
+)
 from repro.kernels import ops
 from repro.kernels.ref import logistic_stats_ref, slab_gram_ref, slab_spmv_ref
 
@@ -33,6 +37,13 @@ def _time(fn, *args, reps=5):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps
+
+
+def _time_best(fn, *args, reps=10, chunks=5):
+    """Min-of-chunk-means timing: robust to bursty co-tenant load (a CI
+    gate fed by a mean over one noisy window flaps; the best chunk tracks
+    the actual cost of the op)."""
+    return min(_time(fn, *args, reps=reps) for _ in range(chunks))
 
 
 def _make_slab(t, k, n_loc, seed=0):
@@ -83,6 +94,76 @@ def bench_slab_suite(*, n_loc: int = 1024, tile: int = 128,
     return out
 
 
+def bench_cycle_tile(*, f: int = 128, n_loc: int = 2048,
+                     density: float = 0.2, block: int = 16,
+                     reps: int = 20) -> dict:
+    """Per-tile blocked-vs-sequential CD cycle timing on a bench-shaped
+    weighted Gram tile (the ``--cycle`` section of the path benchmark and
+    the CI re-serialization gate).
+
+    Two granularities:
+
+    * cycle-only (``speedup``, the gated number): the F-step scalar chain
+      vs the F/B-step blocked cycle on the same (F, F) tile — the
+      dependent-step reduction itself;
+    * full tile step (``step_speedup``): Gram build + cycle at ``n_loc``
+      local rows. At deep data-sharding (production 16x16 mesh,
+      n_loc = n/256) the tile cycle is a large share of the step and the
+      blocked win carries through; at shallow sharding the O(n_loc F^2)
+      MXU-destined Gram matmul dominates on CPU and the end-to-end win
+      awaits the TPU kernel.
+
+    ``modes`` records how many blocks ran full-B / halved / sequential
+    under the Gershgorin safeguard, so a collapse toward all-sequential is
+    visible in the report."""
+    key = jax.random.key(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    Xf = jax.random.normal(k1, (n_loc, f)) * (
+        jax.random.uniform(k2, (n_loc, f)) < density)
+    w = jnp.abs(jax.random.normal(k3, (n_loc,))) * 0.2 + 0.01
+    r = jax.random.normal(jax.random.fold_in(k3, 1), (n_loc,))
+    G = Xf.T @ (w[:, None] * Xf)
+    c = Xf.T @ (w * r)
+    beta = jnp.zeros(f)
+    lam = 0.3
+
+    def tile_step(solver):
+        def step(Xf, w, r, b):
+            wX = w[:, None] * Xf
+            G = Xf.T @ wX
+            c = wX.T @ r
+            d = solver(G, c, b, b * 0, lam, 1e-6)
+            return r - Xf @ d
+        return jax.jit(step)
+
+    def cycle_scan(solver, nt=32):
+        # the hot paths run the cycle inside a scan over tiles; timing a
+        # single ~25us dispatch is noise-bound, the scanned form measures
+        # the chain itself (the carry feeds c so tiles can't be CSE'd)
+        def one(carry, _):
+            d = solver(G, c + carry[:1], beta, beta * 0, lam, 1e-6)
+            return d, None
+
+        fn = jax.jit(
+            lambda: jax.lax.scan(one, jnp.zeros(f), None, length=nt)[0])
+        return _time_best(fn, reps=reps) / nt
+
+    ts = cycle_scan(cd_cycle_gram_tile)
+    tb = cycle_scan(lambda *a: cd_cycle_blocked_tile(*a, block=block))
+    step_seq = tile_step(cd_cycle_gram_tile)
+    step_blk = tile_step(lambda *a: cd_cycle_blocked_tile(*a, block=block))
+    tss = _time_best(step_seq, Xf, w, r, beta, reps=reps)
+    tsb = _time_best(step_blk, Xf, w, r, beta, reps=reps)
+    modes = np.bincount(np.asarray(blocked_cycle_modes(G, block)),
+                        minlength=3)
+    return {"f": f, "block": block, "n_loc": n_loc, "density": density,
+            "sequential_us": ts * 1e6, "blocked_us": tb * 1e6,
+            "speedup": ts / max(tb, 1e-12),
+            "step_sequential_us": tss * 1e6, "step_blocked_us": tsb * 1e6,
+            "step_speedup": tss / max(tsb, 1e-12),
+            "modes": [int(x) for x in modes]}
+
+
 def run():
     key = jax.random.key(0)
     for f in (128, 256, 512):
@@ -104,6 +185,11 @@ def run():
         if isinstance(row, dict):
             emit(f"kernel.{name}.sparse", row["sparse_us"],
                  f"speedup_vs_densify={row['speedup']:.2f}x")
+    for f, block in ((128, 8), (128, 16), (256, 16)):
+        row = bench_cycle_tile(f=f, block=block)
+        emit(f"kernel.blocked_cycle.F{f}.B{block}", row["blocked_us"],
+             f"speedup_vs_sequential={row['speedup']:.2f}x;"
+             f"modes={row['modes']}")
 
 
 if __name__ == "__main__":

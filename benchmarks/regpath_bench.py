@@ -17,11 +17,15 @@ repeated production paths pay.
 ``--distributed`` adds a third driver — ``regularization_path_distributed``
 on a 2x4 fake-device mesh (same screened engine, restricted solves on the
 mesh); ``--sparse`` runs it over by-feature (row_idx, values) slabs so the
-whole path (screen included) never materializes a dense X.
+whole path (screen included) never materializes a dense X. ``--cycle``
+adds the blocked-vs-sequential CD cycle section: a per-tile microbench of
+the semi-parallel cycle against the F-step chain plus the engine path
+rerun with ``cycle_mode="blocked"`` (the CI gate keeps the per-tile
+speedup from collapsing — the chain silently re-serializing).
 
     PYTHONPATH=src python -m benchmarks.regpath_bench            # paper-ish shape
     PYTHONPATH=src python -m benchmarks.regpath_bench --tiny     # CI smoke
-    PYTHONPATH=src python -m benchmarks.regpath_bench --tiny --distributed --sparse
+    PYTHONPATH=src python -m benchmarks.regpath_bench --tiny --distributed --sparse --kernels --cycle
 """
 from __future__ import annotations
 
@@ -95,7 +99,8 @@ def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
         density: float = 0.2, k_true: int = 64,
         out_path: str = "BENCH_regpath.json",
         distributed: bool = False, sparse: bool = False,
-        kernels: bool = False, tiny: bool = False) -> dict:
+        kernels: bool = False, cycle: bool = False, block: int = 16,
+        tiny: bool = False) -> dict:
     # sparse ground truth (k_true << p): the large-p regime screening is
     # for — most features never activate anywhere on the path
     cfg = GLMConfig(name="regpath-bench", num_examples=int(n / 0.8),
@@ -148,6 +153,60 @@ def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
         }
         print(f"# distributed{' (sparse slabs)' if sparse else ''}: "
               f"cold {dist_cold:.2f}s warm {dist_warm:.2f}s")
+    if cycle:
+        import dataclasses
+
+        from benchmarks.kernels_bench import bench_cycle_tile
+
+        # the engine path again, with every within-tile chain swapped for
+        # the blocked semi-parallel cycle — same screened driver, so the
+        # warm delta is exactly the chain-vs-blocked difference
+        blk_opts = dataclasses.replace(opts, cycle_mode="blocked",
+                                       block=block)
+        blk_rows, blk_cold = _timed(lambda: engine_path(X, y, path_len,
+                                                        blk_opts))
+        _, blk_warm = _timed(lambda: engine_path(X, y, path_len, blk_opts))
+        # acceptance: the blocked path must land on the sequential path's
+        # objectives — the safeguard + line search make it an acceleration,
+        # not an approximation
+        max_gap = max(
+            abs(b["f"] - s["f"]) / max(abs(s["f"]), 1e-9)
+            for b, s in zip(blk_rows, eng_rows)
+        )
+        # the microbench is the gate: fixed canonical shapes in CI and
+        # locally (like the slab suite — the gate needs the regime where
+        # the blocked win is decisive, which tiny path shapes can't
+        # provide: a 32-row tile is rank-deficient and the safeguard
+        # rightly refuses to parallelize it), and reps stay high (the
+        # cycle is ~30us — a flaky floor would be worse than a slow one)
+        report["cycle"] = {
+            "block": block,
+            # bench-shape tile: F=128 from n_loc=2048 density-0.2 rows
+            "per_tile": bench_cycle_tile(f=128, n_loc=2048, block=block,
+                                         reps=30),
+            # production-mesh-depth tile: n_loc = 2048/16 (16x16 mesh data
+            # extent). Informational, not gated: at this depth the Gram
+            # tile is near rank-deficient and the Gershgorin safeguard
+            # demotes most blocks — the entry tracks how the safeguard
+            # behaves, not a speedup floor.
+            "per_tile_mesh16": bench_cycle_tile(f=128, n_loc=128,
+                                               block=block, reps=30),
+            "path": {"cold_s": blk_cold, "warm_s": blk_warm,
+                     "sequential_warm_s": eng_warm,
+                     "speedup_vs_sequential": eng_warm / max(blk_warm, 1e-12),
+                     "max_rel_f_gap": max_gap,
+                     "per_lambda": blk_rows},
+        }
+        for key in ("per_tile", "per_tile_mesh16"):
+            pt = report["cycle"][key]
+            print(f"# cycle {key} (n_loc={pt['n_loc']}): cycle "
+                  f"{pt['blocked_us']:.0f}us vs {pt['sequential_us']:.0f}us "
+                  f"({pt['speedup']:.2f}x); tile step "
+                  f"{pt['step_blocked_us']:.0f}us vs "
+                  f"{pt['step_sequential_us']:.0f}us "
+                  f"({pt['step_speedup']:.2f}x); modes={pt['modes']}")
+        print(f"# cycle path: warm {blk_warm:.2f}s vs {eng_warm:.2f}s "
+              f"sequential (max rel f gap {max_gap:.1e})")
     if kernels:
         from benchmarks.kernels_bench import bench_slab_suite
 
@@ -184,6 +243,13 @@ def main():
     ap.add_argument("--kernels", action="store_true",
                     help="add the slab kernel microbench section "
                          "(sparse-native vs densify at matched shapes)")
+    ap.add_argument("--cycle", action="store_true",
+                    help="add the blocked-vs-sequential CD cycle section "
+                         "(per-tile microbench + blocked end-to-end warm "
+                         "path)")
+    ap.add_argument("--block", type=int, default=16,
+                    help="B: coordinates per semi-parallel block for "
+                         "--cycle (default 16)")
     ap.add_argument("--out", default="BENCH_regpath.json")
     ap.add_argument("--n", type=int, default=2048)
     ap.add_argument("--p", type=int, default=4096)
@@ -197,7 +263,8 @@ def main():
     report = run(n=args.n, p=args.p, path_len=args.path_len,
                  density=args.density, out_path=args.out,
                  distributed=args.distributed, sparse=args.sparse,
-                 kernels=args.kernels, tiny=args.tiny)
+                 kernels=args.kernels, cycle=args.cycle, block=args.block,
+                 tiny=args.tiny)
     # Screening pays in proportion to p; tiny CI-smoke shapes sit below the
     # break-even point, so the strictly-faster gate applies to real shapes.
     if not args.tiny and not report["engine_strictly_faster"]:

@@ -33,9 +33,12 @@ from repro.core.screening import (  # noqa: F401
     strong_rule_mask,
 )
 from repro.core.subproblem import (  # noqa: F401
+    blocked_cycle_modes,
+    cd_cycle_blocked_tile,
     cd_cycle_gram,
     cd_cycle_gram_tile,
     cd_cycle_residual,
+    make_tile_solver,
     solve_subproblem,
 )
 from repro.core.truncated_gradient import TGOptions, truncated_gradient_fit  # noqa: F401

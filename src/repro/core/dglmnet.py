@@ -37,14 +37,19 @@ from repro.core.subproblem import solve_subproblem
 @dataclass(frozen=True)
 class DGLMNETOptions:
     num_blocks: int = 1              # M simulated machines (feature blocks)
-    method: str = "gram"             # gram | residual
+    method: str = "gram"             # gram | blocked | residual | jacobi
     tile: int = 128                  # Gram tile size (MXU-aligned)
     n_cycles: int = 1                # CD cycles per subproblem (paper: 1)
-    use_kernel: bool = False         # Pallas gram_cd kernel (interpret on CPU)
+    use_kernel: bool = False         # Pallas tile kernels (interpret on CPU)
     max_iters: int = 100
     rel_tol: float = 1e-6            # relative objective decrease stop
     snap_tol: float = 1e-4           # alpha->1 snap-back tolerance (relative)
     nu: float = 1e-6
+    # within-tile CD cycle: "sequential" (exact chain, the default),
+    # "blocked" (semi-parallel B-wide Jacobi blocks with the Gershgorin
+    # safeguard), or "auto" (kernels.prefer_blocked_cd tile-size heuristic)
+    cycle_mode: str = "sequential"
+    block: int = 16                  # B: coordinates per semi-parallel block
 
 
 class FitState(NamedTuple):
@@ -101,7 +106,8 @@ def _iteration(X, y, beta, m, lam, opts: DGLMNETOptions, w=None, z=None):
         return solve_subproblem(
             Xm, w, z, bm, lam,
             method=opts.method, n_cycles=opts.n_cycles, tile=opts.tile,
-            use_kernel=opts.use_kernel,
+            use_kernel=opts.use_kernel, cycle_mode=opts.cycle_mode,
+            block=opts.block,
         )
 
     dbeta_b, dm_b = jax.vmap(solve_one)(Xb, bb)           # (M, pb), (M, n)

@@ -34,7 +34,7 @@ from repro.compat import pcast_varying, shard_map
 from repro.core import engine
 from repro.core.dglmnet import DGLMNETOptions
 from repro.core.objective import margins
-from repro.core.subproblem import cd_cycle_gram_tile
+from repro.core.subproblem import make_tile_solver
 
 
 def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -42,11 +42,14 @@ def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 
 def local_subproblem(X_loc, w_loc, r, beta_loc, lam, *, tile: int, nu: float,
-                     data_axes: Tuple[str, ...], use_kernel: bool = False):
+                     data_axes: Tuple[str, ...], use_kernel: bool = False,
+                     cycle_mode: str = "sequential", block: int = 16):
     """Per-(data, model)-shard subproblem body. Runs under shard_map.
 
     X_loc: (n_loc, p_loc); w_loc/r: (n_loc,); beta_loc: (p_loc,).
-    Returns (dbeta_loc, r_final).
+    Returns (dbeta_loc, r_final). ``cycle_mode``/``block`` pick the
+    within-tile CD cycle (sequential chain vs the blocked semi-parallel
+    cycle) via the shared ``make_tile_solver`` resolution.
     """
     n_loc, p_loc = X_loc.shape
     assert p_loc % tile == 0, (p_loc, tile)
@@ -57,10 +60,8 @@ def local_subproblem(X_loc, w_loc, r, beta_loc, lam, *, tile: int, nu: float,
         # Pallas-kernel path runs with check_vma=False (interpret-mode scan
         # internals mix varying axes), where pcast is unavailable.
         r = pcast_varying(r, "model")
-    if use_kernel:
-        from repro.kernels.ops import gram_cd as tile_solver
-    else:
-        tile_solver = partial(cd_cycle_gram_tile)
+    tile_solver = make_tile_solver(cycle_mode=cycle_mode, tile=tile,
+                                   block=block, use_kernel=use_kernel)
 
     def tile_step(carry, idx):
         r, dbeta = carry
@@ -73,10 +74,7 @@ def local_subproblem(X_loc, w_loc, r, beta_loc, lam, *, tile: int, nu: float,
             c = jax.lax.psum(c, ax)
         b_f = jax.lax.dynamic_slice(beta_loc, (idx * tile,), (tile,))
         db_f = jax.lax.dynamic_slice(dbeta, (idx * tile,), (tile,))
-        if use_kernel:
-            d = tile_solver(G, c, b_f, db_f, lam, nu)
-        else:
-            d = cd_cycle_gram_tile(G, c, b_f, db_f, lam, nu)
+        d = tile_solver(G, c, b_f, db_f, lam, nu)
         r = r - Xf @ d                                   # local-row residual
         dbeta = jax.lax.dynamic_update_slice(dbeta, db_f + d, (idx * tile,))
         return (r, dbeta), None
@@ -97,7 +95,8 @@ def local_subproblem(X_loc, w_loc, r, beta_loc, lam, *, tile: int, nu: float,
 
 
 def local_subproblem_sparse(row_idx, values, w_loc, r, beta_loc, lam, *,
-                            tile: int, nu: float, data_axes: Tuple[str, ...]):
+                            tile: int, nu: float, data_axes: Tuple[str, ...],
+                            cycle_mode: str = "sequential", block: int = 16):
     """Sparse by-feature variant (paper Table 1 layout at webspam scale).
 
     row_idx/values: (p_loc, K) — per local feature, its local-example rows
@@ -118,6 +117,8 @@ def local_subproblem_sparse(row_idx, values, w_loc, r, beta_loc, lam, *,
     assert p_loc % tile == 0, (p_loc, tile)
     nt = p_loc // tile
     r = pcast_varying(r, "model")
+    tile_solver = make_tile_solver(cycle_mode=cycle_mode, tile=tile,
+                                   block=block)
 
     def tile_step(carry, idx):
         r, dbeta = carry
@@ -129,7 +130,7 @@ def local_subproblem_sparse(row_idx, values, w_loc, r, beta_loc, lam, *,
             c = jax.lax.psum(c, ax)
         b_f = jax.lax.dynamic_slice(beta_loc, (idx * tile,), (tile,))
         db_f = jax.lax.dynamic_slice(dbeta, (idx * tile,), (tile,))
-        d = cd_cycle_gram_tile(G, c, b_f, db_f, lam, nu)
+        d = tile_solver(G, c, b_f, db_f, lam, nu)
         r = r - kops.slab_spmv(rows, vals, d, n_loc=n_loc)
         dbeta = jax.lax.dynamic_update_slice(dbeta, db_f + d, (idx * tile,))
         return (r, dbeta), None
@@ -202,6 +203,7 @@ def make_distributed_iteration_sparse(mesh: Mesh, opts: DGLMNETOptions, *,
         dbeta, r = local_subproblem_sparse(
             row_idx[:, 0, :], values[:, 0, :], w, z, beta, lam[0],
             tile=opts.tile, nu=opts.nu, data_axes=daxes,
+            cycle_mode=opts.cycle_mode, block=opts.block,
         )
         dm = jax.lax.psum(z - r, model_axis)
         return dbeta, dm
@@ -306,6 +308,7 @@ def make_distributed_iteration(mesh: Mesh, opts: DGLMNETOptions, *,
         dbeta, r = local_subproblem(
             X, w, z, beta, lam[0], tile=opts.tile, nu=opts.nu,
             data_axes=daxes, use_kernel=opts.use_kernel,
+            cycle_mode=opts.cycle_mode, block=opts.block,
         )
         # paper Alg. 4 step 3: AllReduce of per-block margin deltas over blocks
         dm = z - r                                       # X_loc @ dbeta_loc

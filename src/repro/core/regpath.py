@@ -48,6 +48,7 @@ from repro.core.distributed import (
 )
 from repro.core.objective import lambda_max, margins, objective
 from repro.core.screening import (
+    budgeted_admission,
     capacity_bucket,
     gather_columns,
     kkt_violations,
@@ -79,7 +80,8 @@ def _lambda_grid(lmax: float, path_len: int,
 
 
 def _screened_point(p, lam, lam_prev, beta, m, *, grad_abs, restricted_solve,
-                    empty_result, cap_tile, kkt_tol, max_kkt_rounds):
+                    empty_result, cap_tile, kkt_tol, max_kkt_rounds,
+                    prev_mask=None, violation_budget: Optional[int] = 512):
     """One path point of the strong-rule/KKT loop, solver-agnostic.
 
     ``grad_abs(m) -> |g|`` is the full-gradient pass (dense matvec or the
@@ -88,13 +90,30 @@ def _screened_point(p, lam, lam_prev, beta, m, *, grad_abs, restricted_solve,
     warm-started from ``beta``. Only the active-set and violation *counts*
     are synced to host (to pick the capacity bucket and decide
     termination) — the solves themselves stay device-resident.
+
+    Blitz-style dynamic working-set growth (Johnson & Guestrin; ROADMAP
+    follow-on): ``prev_mask`` carries the working set across path points
+    instead of resetting it to the strong rule each lambda — previously
+    admitted violators that solved to zero would otherwise be dropped,
+    violate again at the next lambda, and cost a re-solve round. Within a
+    point, violators re-enter under a per-round budget of
+    ``min(violation_budget, 2 * |A|)`` (the strongest first), so one bad
+    screen can't blow the capacity bucket up a power-of-two step. The final
+    certification is unchanged: the loop only exits on a clean KKT pass
+    over everything outside the working set (the penultimate round lifts
+    the budget so certification can always complete within
+    ``max_kkt_rounds``). Returns the certified mask alongside the result
+    for the driver to carry.
     """
     g_abs = grad_abs(m)
     mask = strong_rule_mask(g_abs, lam, lam_prev, beta)
+    if prev_mask is not None:
+        mask = jnp.logical_or(mask, prev_mask)
 
     res = None
     rounds = 0
     cap = 0
+    deferred = 0
     for rounds in range(1, max_kkt_rounds + 1):
         count = int(mask.sum())
         if count == 0:
@@ -109,7 +128,15 @@ def _screened_point(p, lam, lam_prev, beta, m, *, grad_abs, restricted_solve,
         n_viol = int(viol.sum())
         if n_viol == 0:
             break
-        mask = jnp.logical_or(mask, viol)         # violators re-enter
+        if violation_budget is not None and rounds < max_kkt_rounds - 1:
+            budget = min(violation_budget, 2 * max(count, 1))
+            admitted = budgeted_admission(viol, g_abs, budget)
+            # ties at the cutoff may admit more than the budget — count
+            # what actually stayed out, not the nominal overflow
+            deferred += n_viol - int(admitted.sum())
+        else:
+            admitted = viol                       # safety valve: admit all
+        mask = jnp.logical_or(mask, admitted)     # violators re-enter
         beta, m = beta_new, m_new                 # keep this round's progress
     else:
         raise RuntimeError(
@@ -117,14 +144,15 @@ def _screened_point(p, lam, lam_prev, beta, m, *, grad_abs, restricted_solve,
             f"at lambda={lam} (last violation count > 0)"
         )
 
-    info = {"active": int(mask.sum()), "capacity": cap, "kkt_rounds": rounds}
-    return res, beta_new, m_new, info
+    info = {"active": int(mask.sum()), "capacity": cap, "kkt_rounds": rounds,
+            "deferred": deferred}
+    return res, beta_new, m_new, info, mask
 
 
 def _fit_screened(X, y, lam, lam_prev, beta, m, opts, *, kkt_tol,
-                  max_kkt_rounds):
+                  max_kkt_rounds, prev_mask=None, violation_budget=512):
     """Single-process path point: strong-rule restricted ``fit`` + KKT
-    certification. Returns (res, beta_full, m_full, info)."""
+    certification. Returns (res, beta_full, m_full, info, mask)."""
     n, p = X.shape
 
     def grad_abs(m_cur):
@@ -144,6 +172,7 @@ def _fit_screened(X, y, lam, lam_prev, beta, m, opts, *, kkt_tol,
         p, lam, lam_prev, beta, m, grad_abs=grad_abs,
         restricted_solve=restricted_solve, empty_result=empty_result,
         cap_tile=opts.tile, kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
+        prev_mask=prev_mask, violation_budget=violation_budget,
     )
 
 
@@ -159,13 +188,21 @@ def regularization_path(
     screen: bool = True,
     kkt_tol: float = 1e-3,
     max_kkt_rounds: int = 8,
+    carry_working_set: bool = True,
+    violation_budget: Optional[int] = 512,
 ) -> List[PathPoint]:
     """Returns one PathPoint per lambda (decreasing). ``eval_fn(beta)``
     computes test metrics (e.g. AUPRC) per point — the paper's Figure 1.
 
     ``screen=True`` (default) runs the strong-rule/KKT engine; ``False``
     reproduces the seed's full-p warm-started loop (the oracle the
-    screening tests compare against).
+    screening tests compare against). ``carry_working_set`` grows the
+    working set blitz-style across path points (the certified set at each
+    lambda seeds the next) instead of resetting to the strong rule;
+    ``violation_budget`` caps per-round violator admission at
+    ``min(budget, 2 * |A|)``. Both cut re-solve rounds near the dense end
+    of the path; set ``carry_working_set=False, violation_budget=None``
+    for the pre-blitz reset-every-lambda behaviour.
     """
     lmax = float(lambda_max(X, y))
     lams = _lambda_grid(lmax, path_len, extra_lams)
@@ -174,13 +211,17 @@ def regularization_path(
     beta = jnp.zeros(p, jnp.float32)
     m = jnp.zeros(n, jnp.float32)
     lam_prev = lmax
+    carry_mask = None
     points: List[PathPoint] = []
     for lam in lams:
         if screen:
-            res, beta, m, info = _fit_screened(
+            res, beta, m, info, mask = _fit_screened(
                 X, y, lam, lam_prev, beta, m, opts,
                 kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
+                prev_mask=carry_mask, violation_budget=violation_budget,
             )
+            if carry_working_set:
+                carry_mask = mask
         else:
             res = fit(X, y, lam, beta0=beta, opts=opts)
             beta = res.beta
@@ -214,9 +255,13 @@ def regularization_path_distributed(
     verbose: bool = False,
     kkt_tol: float = 1e-3,
     max_kkt_rounds: int = 8,
+    carry_working_set: bool = True,
+    violation_budget: Optional[int] = 512,
 ) -> List[PathPoint]:
     """The screened path with every restricted solve on the mesh
     (Algorithm 5 run distributed — the paper's webspam-scale regime).
+    ``carry_working_set`` / ``violation_budget`` are the blitz-style
+    working-set growth knobs shared with :func:`regularization_path`.
 
     ``data`` is either a dense (n, p) X (restricted solves are
     ``fit_distributed``), a :class:`~repro.data.byfeature.ByFeature`, a
@@ -392,14 +437,18 @@ def regularization_path_distributed(
     lams = _lambda_grid(lmax, path_len, extra_lams)
     beta = jnp.zeros(p_work, jnp.float32)
     lam_prev = lmax
+    carry_mask = None
     points: List[PathPoint] = []
     for lam in lams:
-        res, beta, m, info = _screened_point(
+        res, beta, m, info, mask = _screened_point(
             p_work, lam, lam_prev, beta, m, grad_abs=grad_abs,
             restricted_solve=make_restricted_solve(lam),
             empty_result=empty_result, cap_tile=cap_tile,
             kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
+            prev_mask=carry_mask, violation_budget=violation_budget,
         )
+        if carry_working_set:
+            carry_mask = mask
         lam_prev = lam
         beta_out = to_output(beta) if to_output is not None else beta[:p]
         nnz = int(jnp.sum(jnp.abs(beta_out) > 0))

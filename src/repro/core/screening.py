@@ -86,6 +86,22 @@ def kkt_violations(g_abs, lam, mask, *, tol: float = 1e-3) -> jnp.ndarray:
     return jnp.logical_and(jnp.logical_not(mask), g_abs > slack)
 
 
+def budgeted_admission(viol, g_abs, budget: int):
+    """Blitz-style violator admission: keep only the ``budget`` most-violating
+    features (largest ``g_abs``) of ``viol``; the rest wait for a later
+    round. Admitting every violator at once blows the capacity bucket up a
+    power-of-two step (and a solver retrace) for features that frequently
+    solve straight back to zero; the budget grows the working set
+    incrementally instead. Ties at the cutoff are all admitted (the budget
+    is a growth *rate*, not an exact count). Returns the admitted mask."""
+    n_viol = int(viol.sum())
+    if n_viol <= budget:
+        return viol
+    scores = jnp.where(viol, g_abs, -jnp.inf)
+    cutoff = jax.lax.top_k(scores, budget)[0][-1]
+    return jnp.logical_and(viol, scores >= cutoff)
+
+
 def capacity_bucket(count: int, p: int, *, tile: int) -> int:
     """Round an active-set size up to a power-of-two multiple of ``tile``
     (min ``tile``, max ``p``). Bounds the number of distinct restricted

@@ -18,6 +18,23 @@ Two mathematically identical implementations:
   compute G = X_F^T diag(w) X_F and c = X_F^T (w*r) with MXU matmuls, run the
   sequential cycle on the F x F Gram tile (Pallas kernel `gram_cd`), then
   reconstruct the residual update with one more matmul. Identical iterates.
+
+Plus the *semi-parallel* tile cycle this sequence does not need to be:
+
+* ``cd_cycle_blocked_tile`` — partition the F-wide tile into B-wide blocks
+  and update all B coordinates of a block Jacobi-style from a shared
+  gradient snapshot (one masked matvec per block instead of B dependent
+  scalar steps); blocks are applied sequentially via ``s += G[:, blk] @
+  d_blk``. Shotgun (Bradley et al., 1105.5379) licenses the concurrent
+  within-block update when the coordinates are weakly coupled; the paper's
+  Theorem-1 rate only needs the block-separable model plus the global line
+  search, so an inexact within-tile cycle is admissible (Mahajan et al.,
+  1405.4544). A per-block Gershgorin dominance check
+  (:func:`blocked_cycle_modes`) halves B and finally falls back to the
+  sequential scalar chain for pathologically correlated blocks — and every
+  outer step stays monotone regardless because the engine's line search
+  safeguards the combined direction. With B=1 the blocked cycle *is* the
+  sequential chain, bit for bit.
 """
 from __future__ import annotations
 
@@ -30,6 +47,12 @@ import jax.numpy as jnp
 from repro.core.objective import soft_threshold
 
 NU = 1e-6
+# Strict within-block diagonal dominance (row-sum Gershgorin ratio < 1)
+# makes the proximal-Jacobi block update a contraction; 0.9 leaves margin
+# for the soft-threshold kinks. Above it, halve; above it at B/2, go
+# sequential. The global line search makes any choice safe — the safeguard
+# is about not *wasting* outer iterations on conflicted updates.
+DOM_TOL = 0.9
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +146,158 @@ def cd_cycle_gram_tile(
     return d
 
 
+def _block_dominance(G: jnp.ndarray, width: int, nu: float) -> jnp.ndarray:
+    """Per-block Gershgorin row ratio: for each ``width``-wide diagonal
+    block of G, ``max_j sum_{k != j, same block} |G_jk| / (G_jj + nu)``.
+    Ratio < 1 is strict within-block diagonal dominance — the proximal
+    Jacobi update on the block is a contraction. The same-block mask is a
+    compile-time constant, so this is one fused elementwise pass over G
+    (no gathers — it must stay cheap under vmap and inside scans)."""
+    f = G.shape[0]
+    nb = f // width
+    blk = jnp.arange(f) // width
+    same = (blk[:, None] == blk[None, :]).astype(G.dtype)   # static (F, F)
+    adiag = jnp.abs(jnp.diagonal(G))
+    offsum = (jnp.abs(G) * same).sum(axis=1) - adiag
+    rho = offsum / (jnp.diagonal(G) + nu)
+    return rho.reshape(nb, width).max(axis=1)
+
+
+def blocked_cycle_modes(G: jnp.ndarray, block: int, nu: float = NU,
+                        dom_tol: float = DOM_TOL) -> jnp.ndarray:
+    """Per-block safeguard decision for the blocked cycle, from G alone
+    (iterate-independent, so it is computed once per tile and shared by the
+    oracle and the Pallas kernel):
+
+    * 0 — full-B proximal-Jacobi step (block passes the dominance check)
+    * 1 — two sequential B/2-wide Jacobi sub-steps (only the halves pass)
+    * 2 — sequential scalar chain over the block (pathological correlation)
+    """
+    f = G.shape[0]
+    nb = f // block
+    if block <= 1:
+        return jnp.zeros(nb, jnp.int32)
+    rho_full = _block_dominance(G, block, nu)
+    if block % 2:
+        return jnp.where(rho_full <= dom_tol, 0, 2).astype(jnp.int32)
+    rho_half = _block_dominance(G, block // 2, nu).reshape(nb, 2).max(axis=1)
+    return jnp.where(
+        rho_full <= dom_tol, 0, jnp.where(rho_half <= dom_tol, 1, 2)
+    ).astype(jnp.int32)
+
+
+def cd_cycle_blocked_tile(
+    G: jnp.ndarray,          # (F, F) = X_F^T diag(w) X_F
+    c: jnp.ndarray,          # (F,)   = X_F^T (w * r) at tile entry
+    beta: jnp.ndarray,       # (F,)
+    dbeta0: jnp.ndarray,     # (F,) accumulated update at tile entry
+    lam: float,
+    nu: float = NU,
+    *,
+    block: int = 16,
+    dom_tol: float = DOM_TOL,
+) -> jnp.ndarray:
+    """Blocked semi-parallel CD cycle on a Gram tile: B coordinates at a
+    time update Jacobi-style from the shared snapshot ``g = c - s``, then
+    ``s += G[:, blk] @ d_blk`` applies the block before the next one — F/B
+    dependent steps instead of F. Per-block safeguard via
+    :func:`blocked_cycle_modes`. Pure-jnp oracle for the Pallas kernel
+    ``blocked_cd``; with ``block=1`` the iterates are bit-identical to
+    :func:`cd_cycle_gram_tile`."""
+    f = G.shape[0]
+    if f % block:
+        raise ValueError(f"block={block} must divide the tile width F={f}")
+    nb = f // block
+    diag = jnp.diagonal(G) + nu
+    base = beta + dbeta0
+    modes = blocked_cycle_modes(G, block, nu=nu, dom_tol=dom_tol)
+
+    def jacobi(carry, start, width):
+        """One proximal-Jacobi step on coords [start, start+width)."""
+        d, s = carry
+        sl = lambda v: jax.lax.dynamic_slice(v, (start,), (width,))
+        g = sl(c) - sl(s)
+        h = sl(diag)
+        d_blk = sl(d)
+        b_old = sl(base) + d_blk
+        b_new = soft_threshold(g + b_old * h, lam) / h
+        delta = b_new - b_old
+        cols = jax.lax.dynamic_slice(G, (0, start), (f, width))
+        s = s + (cols * delta[None, :]).sum(axis=1)   # s += G[:, blk] @ d_blk
+        d = jax.lax.dynamic_update_slice(d, d_blk + delta, (start,))
+        return d, s
+
+    def seq_chain(carry, start):
+        """The sequential scalar fallback, restricted to one block."""
+        def body(i, carry):
+            d, s = carry
+            j = start + i
+            g = c[j] - s[j]
+            h = diag[j]
+            b_old = base[j] + d[j]
+            b_new = soft_threshold(g + b_old * h, lam) / h
+            delta = b_new - b_old
+            s = s + delta * G[:, j]
+            d = d.at[j].add(delta)
+            return d, s
+
+        return jax.lax.fori_loop(0, block, body, carry)
+
+    def block_step(b, carry):
+        start = b * block
+        if block == 1:
+            # a 1-wide block is exactly one sequential step; no safeguard
+            # branches to trace (and B/2 = 0 must never be traced)
+            return jacobi(carry, start, 1)
+        return jax.lax.switch(
+            modes[b],
+            (
+                lambda cr: jacobi(cr, start, block),
+                lambda cr: jacobi(jacobi(cr, start, block // 2),
+                                  start + block // 2, block // 2),
+                lambda cr: seq_chain(cr, start),
+            ),
+            carry,
+        )
+
+    d, _ = jax.lax.fori_loop(
+        0, nb, block_step, (jnp.zeros_like(c), jnp.zeros_like(c))
+    )
+    return d
+
+
+def make_tile_solver(*, cycle_mode: str = "sequential", tile: int,
+                     block: int = 16, use_kernel: bool = False,
+                     dom_tol: float = DOM_TOL):
+    """Resolve the per-tile CD cycle implementation every hot path shares
+    (``cd_cycle_gram``, the distributed dense/sparse subproblems).
+
+    ``cycle_mode``: "sequential" (the exact chain), "blocked" (semi-parallel
+    blocked cycle), or "auto" (the kernel layer's tile-size heuristic
+    ``prefer_blocked_cd`` picks). ``use_kernel`` swaps in the Pallas kernels
+    (native on TPU, interpret-mode elsewhere). The returned callable has the
+    tile-solver signature ``(G, c, beta, dbeta0, lam, nu) -> d``.
+    """
+    if cycle_mode == "auto":
+        from repro.kernels.ops import prefer_blocked_cd
+
+        cycle_mode = ("blocked" if prefer_blocked_cd(tile, block)
+                      else "sequential")
+    if cycle_mode == "blocked":
+        if use_kernel:
+            from repro.kernels.ops import blocked_cd
+
+            return partial(blocked_cd, block=block, dom_tol=dom_tol)
+        return partial(cd_cycle_blocked_tile, block=block, dom_tol=dom_tol)
+    if cycle_mode != "sequential":
+        raise ValueError(f"unknown cycle_mode {cycle_mode!r}")
+    if use_kernel:
+        from repro.kernels.ops import gram_cd
+
+        return gram_cd
+    return cd_cycle_gram_tile
+
+
 def cd_cycle_gram(
     X: jnp.ndarray,
     w: jnp.ndarray,
@@ -134,11 +309,15 @@ def cd_cycle_gram(
     tile: int = 256,
     nu: float = NU,
     use_kernel: bool = False,
+    cycle_mode: str = "sequential",
+    block: int = 16,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One full CD cycle over the block via Gram tiles (exact, tiled).
 
-    Residual is updated *between* tiles with a dense matmul, so iterates are
-    identical to ``cd_cycle_residual``.
+    Residual is updated *between* tiles with a dense matmul, so with the
+    sequential cycle the iterates are identical to ``cd_cycle_residual``;
+    ``cycle_mode="blocked"`` swaps each tile's chain for the semi-parallel
+    blocked cycle (``cd_cycle_blocked_tile``).
     """
     n, p_b = X.shape
     pad = (-p_b) % tile
@@ -150,10 +329,8 @@ def cd_cycle_gram(
     nt = pt // tile
     Xt = X.reshape(n, nt, tile)
 
-    if use_kernel:
-        from repro.kernels.ops import gram_cd as tile_solver
-    else:
-        tile_solver = None
+    tile_solver = make_tile_solver(cycle_mode=cycle_mode, tile=tile,
+                                   block=block, use_kernel=use_kernel)
 
     def tile_step(carry, idx):
         r, dbeta_f = carry
@@ -163,10 +340,7 @@ def cd_cycle_gram(
         c = wX.T @ r                                 # (F,)
         b_f = jax.lax.dynamic_slice(beta, (idx * tile,), (tile,))
         db_f = jax.lax.dynamic_slice(dbeta_f, (idx * tile,), (tile,))
-        if tile_solver is not None:
-            d = tile_solver(G, c, b_f, db_f, lam, nu)
-        else:
-            d = cd_cycle_gram_tile(G, c, b_f, db_f, lam, nu)
+        d = tile_solver(G, c, b_f, db_f, lam, nu)
         r = r - Xf @ d                               # residual to next tile
         dbeta_f = jax.lax.dynamic_update_slice(dbeta_f, db_f + d, (idx * tile,))
         return (r, dbeta_f), None
@@ -182,25 +356,33 @@ def solve_subproblem(
     beta: jnp.ndarray,
     lam: float,
     *,
-    method: str = "gram",        # "gram" | "residual"
+    method: str = "gram",        # "gram" | "blocked" | "residual" | "jacobi"
     n_cycles: int = 1,
     tile: int = 256,
     use_kernel: bool = False,
+    cycle_mode: str = "sequential",   # "sequential" | "blocked" | "auto"
+    block: int = 16,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Paper Algorithm 2 on one feature block.
 
     Returns (dbeta, dmargin) where dmargin = X @ dbeta (the per-example
-    update the paper all-reduces alongside dbeta).
+    update the paper all-reduces alongside dbeta). ``method="blocked"`` is
+    shorthand for the Gram-tile path with ``cycle_mode="blocked"`` (the
+    semi-parallel within-tile cycle); ``cycle_mode`` applies whenever the
+    Gram path runs.
     """
     dbeta = jnp.zeros_like(beta)
     r = z                                            # dbeta = 0 initially
 
+    if method == "blocked":
+        method, cycle_mode = "gram", "blocked"
     for _ in range(n_cycles):
         if method == "residual":
             dbeta, r = cd_cycle_residual(X, w, r, beta, dbeta, lam)
         elif method == "gram":
             dbeta, r = cd_cycle_gram(
-                X, w, r, beta, dbeta, lam, tile=tile, use_kernel=use_kernel
+                X, w, r, beta, dbeta, lam, tile=tile, use_kernel=use_kernel,
+                cycle_mode=cycle_mode, block=block,
             )
         elif method == "jacobi":
             # Shotgun-style ablation: fully parallel updates, no sequencing

@@ -53,6 +53,31 @@ def gram_cd(G, c, beta, dbeta0, lam, nu=1e-6):
                           interpret=interpret_default())
 
 
+def prefer_blocked_cd(f: int, block: int) -> bool:
+    """Tile-size heuristic for `cycle_mode="auto"`: the blocked cycle wins
+    when it meaningfully shortens the dependent-step chain — at least two
+    blocks per tile and a tile wide enough (F >= 32) that the F-step
+    scalar chain, not the Gram matmul, dominates the tile (CPU-measured;
+    the `--cycle` bench section tracks the crossover). Below that, or at
+    block=1 (== the sequential chain), dispatch stays on ``gram_cd``."""
+    return block > 1 and f >= 2 * block and f >= 32
+
+
+def blocked_cd(G, c, beta, dbeta0, lam, nu=1e-6, *, block: int = 16,
+               dom_tol=None):
+    """Blocked semi-parallel CD cycle on a Gram tile (F/B dependent steps
+    instead of F); same contract as :func:`gram_cd`. The per-block
+    Gershgorin safeguard (halve B, then fall back to the sequential chain)
+    is resolved outside the kernel from G alone."""
+    from repro.core.subproblem import DOM_TOL
+    from repro.kernels.blocked_cd import blocked_cd_pallas
+
+    return blocked_cd_pallas(
+        G, c, beta, dbeta0, lam, nu, block=block,
+        dom_tol=DOM_TOL if dom_tol is None else dom_tol,
+        interpret=interpret_default())
+
+
 def logistic_stats(m, y, *, block: int = 4096):
     """Fused (w, z, nll) from margins — one pass over the examples axis.
 

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.objective import P_EPS, W_MIN
-from repro.core.subproblem import cd_cycle_gram_tile
+from repro.core.subproblem import DOM_TOL, cd_cycle_blocked_tile, cd_cycle_gram_tile
 
 
 def gram_cd_ref(G, c, beta, dbeta0, lam, nu):
@@ -14,6 +14,17 @@ def gram_cd_ref(G, c, beta, dbeta0, lam, nu):
         G.astype(jnp.float32), c.astype(jnp.float32),
         beta.astype(jnp.float32), dbeta0.astype(jnp.float32),
         lam, nu,
+    )
+
+
+def blocked_cd_ref(G, c, beta, dbeta0, lam, nu, *, block=16,
+                   dom_tol=DOM_TOL):
+    """Oracle for kernels.blocked_cd: the core solver's own blocked cycle
+    (which is itself bit-identical to the sequential chain at block=1)."""
+    return cd_cycle_blocked_tile(
+        G.astype(jnp.float32), c.astype(jnp.float32),
+        beta.astype(jnp.float32), dbeta0.astype(jnp.float32),
+        lam, nu, block=block, dom_tol=dom_tol,
     )
 
 

@@ -299,6 +299,82 @@ def lower_glm(name: str, mesh, mesh_name: str, verbose: bool = True) -> dict:
     return out
 
 
+def lower_glm_screened(mesh, mesh_name: str, verbose: bool = True) -> list:
+    """Lowering-only dry-run of the *screened distributed path*'s moving
+    parts at Table-2 dims on the production mesh (ROADMAP "production mesh
+    scale"): proves the 16x16 lowering of
+
+    * the sparse strong-rule screen (``core.screening.make_sparse_screen``
+      slab stream, psum over data axes) at webspam shape;
+    * the by-feature sparse subproblem step over slabs with the *blocked*
+      semi-parallel CD cycle (slab_gram/slab_spmv suite +
+      ``cd_cycle_blocked_tile``);
+    * the dense subproblem step with the Pallas ``blocked_cd`` kernel
+      (epsilon shape, ``use_kernel=True``).
+
+    No ``.compile()`` and no execution — ``.lower()`` alone certifies the
+    shard_map programs partition at mesh scale; compile cost for the full
+    p=16.6M scan is the production TPU's business, not CI's.
+    """
+    from repro.configs.glm import GLM_CONFIGS
+    from repro.core.dglmnet import DGLMNETOptions
+    from repro.core.distributed import (
+        make_dglmnet_step,
+        make_dglmnet_step_sparse,
+    )
+    from repro.core.screening import make_sparse_screen
+
+    mdim = mesh.shape["model"]
+    ddim = num_chips(mesh) // mdim
+    tile = 128
+    opts = DGLMNETOptions(tile=tile, method="gram", cycle_mode="blocked",
+                          block=16)
+    sds = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)
+    results = []
+
+    def record(label, fn, *args):
+        t0 = time.time()
+        fn(*args)          # .lower() inside; any failure propagates
+        out = {"arch": label, "shape": "screened_path", "mesh": mesh_name,
+               "status": "ok", "lower_s": time.time() - t0}
+        if verbose:
+            print(f"--- {label} x screened_path x {mesh_name} "
+                  f"(lower {out['lower_s']:.1f}s, lowering-only)")
+        results.append(out)
+
+    # webspam: sparse screen + sparse blocked step over (p, DP, K) slabs
+    cfg = GLM_CONFIGS["glm-webspam"]
+    n = cfg.num_examples - cfg.num_examples % ddim
+    n_loc = n // ddim
+    p = ((cfg.num_features + mdim * tile - 1) // (mdim * tile)) * (mdim * tile)
+    k_pad = 64
+    slab_i = sds((p, ddim, k_pad), jnp.int32)
+    slab_f = sds((p, ddim, k_pad), jnp.float32)
+    vec_n = sds((n,), jnp.float32)
+    record("glm-webspam-screen",
+           lambda: make_sparse_screen(mesh, n_loc, tile).lower(
+               slab_i, slab_f, vec_n, vec_n))
+    step_sparse = make_dglmnet_step_sparse(mesh, opts)
+    record("glm-webspam-blocked-step",
+           lambda: jax.jit(step_sparse).lower(
+               slab_i, slab_f, vec_n, sds((p,), jnp.float32), vec_n,
+               sds((), jnp.float32)))
+
+    # epsilon: dense step with the Pallas blocked_cd kernel on the mesh
+    cfg = GLM_CONFIGS["glm-epsilon"]
+    n = cfg.num_examples - cfg.num_examples % ddim
+    p = ((cfg.num_features + mdim * tile - 1) // (mdim * tile)) * (mdim * tile)
+    step_dense = make_dglmnet_step(
+        mesh, DGLMNETOptions(tile=tile, cycle_mode="blocked", block=16,
+                             use_kernel=True))
+    record("glm-epsilon-blocked-kernel-step",
+           lambda: jax.jit(step_dense).lower(
+               sds((n, p), jnp.float32), sds((n,), jnp.float32),
+               sds((p,), jnp.float32), sds((n,), jnp.float32),
+               sds((), jnp.float32)))
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, help="arch id (default: all)")
@@ -310,6 +386,10 @@ def main():
                     help="unroll layer loops for exact cost_analysis")
     ap.add_argument("--glm", action="store_true",
                     help="also dry-run the paper's GLM workload (Table-2 dims)")
+    ap.add_argument("--glm-screened", action="store_true",
+                    help="lowering-only dry-run of the screened distributed "
+                         "path (sparse screen + blocked-cycle steps) at "
+                         "Table-2 dims")
     ap.add_argument("--flash-decode", action="store_true",
                     help="seq-parallel flash-decode attention (hillclimb)")
     args = ap.parse_args()
@@ -347,8 +427,17 @@ def main():
                     results.append({"arch": gname, "shape": "dglmnet_step",
                                     "mesh": mesh_name, "status": "error",
                                     "error": repr(e)})
-            if args.arch is None and not args.all:
-                continue
+        if args.glm_screened:
+            try:
+                results.extend(lower_glm_screened(mesh, mesh_name))
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                results.append({"arch": "glm-screened",
+                                "shape": "screened_path", "mesh": mesh_name,
+                                "status": "error", "error": repr(e)})
+        if (args.glm or args.glm_screened) and args.arch is None \
+                and not args.all:
+            continue
         for arch in archs:
             for shape in shapes:
                 try:

@@ -355,6 +355,52 @@ def test_distributed_model_axis_only():
 
 
 @pytest.mark.slow
+def test_distributed_blocked_cycle_equals_local():
+    """The blocked semi-parallel cycle through both distributed restricted
+    paths (dense shard_map + by-feature sparse slabs, plus the Pallas
+    blocked_cd kernel inside shard_map) matches the single-process blocked
+    fit — the same tile math runs either way."""
+    r = _run("""
+        import jax, jax.numpy as jnp
+        from repro.configs.base import GLMConfig
+        from repro.core import (DGLMNETOptions, fit, fit_distributed,
+                                fit_distributed_sparse, lambda_max)
+        from repro.data.byfeature import to_by_feature, to_slabs
+        from repro.data.synthetic import make_glm_dataset
+        from repro.launch.mesh import make_dev_mesh
+
+        cfg = GLMConfig(name='d', num_examples=1024, num_features=128,
+                        density=0.2)
+        ds = make_glm_dataset(cfg, jax.random.key(3))
+        X, y = ds.X_train, ds.y_train
+        n = (X.shape[0] // 2) * 2
+        X, y = X[:n], y[:n]
+        lam = float(lambda_max(X, y)) / 16
+        mesh = make_dev_mesh(2, 4)
+        opts = DGLMNETOptions(num_blocks=4, tile=32, max_iters=25,
+                              cycle_mode='blocked', block=8)
+        ref = fit(X, y, lam, opts=opts)
+        dist = fit_distributed(X, y, lam, mesh, opts=opts)
+        assert abs(dist.f - ref.f) / abs(ref.f) < 1e-5, (dist.f, ref.f)
+        row_idx, values, _ = to_slabs(to_by_feature(X), 2)
+        sp = fit_distributed_sparse(row_idx, values, y, lam, mesh,
+                                    opts=opts, densify=False)
+        assert abs(sp.f - ref.f) / abs(ref.f) < 1e-4, (sp.f, ref.f)
+        kopts = DGLMNETOptions(num_blocks=4, tile=32, max_iters=10,
+                               cycle_mode='blocked', block=8,
+                               use_kernel=True)
+        k = fit_distributed(X, y, lam, mesh, opts=kopts)
+        kref = fit(X, y, lam, opts=DGLMNETOptions(
+            num_blocks=4, tile=32, max_iters=10, cycle_mode='blocked',
+            block=8))
+        assert abs(k.f - kref.f) / abs(kref.f) < 1e-4, (k.f, kref.f)
+        print('OK blocked distributed == local')
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
 def test_distributed_with_kernel():
     """Pallas gram_cd kernel inside shard_map (interpret mode)."""
     r = _run("""
@@ -438,6 +484,23 @@ def test_dev_mesh_dryrun_lowering():
         )
         assert r.returncode == 0, (arch, shape, r.stdout[-2000:], r.stderr[-2000:])
         assert "1 ok, 0 skip, 0 error" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_screened_path_lowering():
+    """--glm-screened: the sparse screen + blocked-cycle steps lower on a
+    mesh (dev size here; the 16x16 production form is the same code with
+    REPRO_DRYRUN_DEVICES=512)."""
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--glm-screened",
+         "--mesh", "dev"],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
+    assert "3 ok, 0 skip, 0 error" in r.stdout
 
 
 @pytest.mark.slow

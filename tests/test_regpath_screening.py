@@ -101,15 +101,61 @@ def test_regpath_recovers_from_violated_screen(path_glm):
     the KKT loop re-solves until certified. On this data the aggressive
     working-set threshold demonstrably under-screens at several lambdas
     (kkt_rounds >= 2 without the test forcing it) — if violators ever stop
-    re-entering, the multi-round points disappear and this fails."""
+    re-entering, the multi-round points disappear and this fails. The
+    blitz-style growth knobs are pinned off: this test certifies the
+    violation *machinery*, which the carried working set is designed to
+    make rarer."""
     X, y = path_glm.X_train, path_glm.y_train
     opts = DGLMNETOptions(num_blocks=4, tile=32, max_iters=150, rel_tol=1e-8)
-    pts = regularization_path(X, y, path_len=8, opts=opts, screen=True)
+    pts = regularization_path(X, y, path_len=8, opts=opts, screen=True,
+                              carry_working_set=False, violation_budget=None)
     assert any(p.screen["kkt_rounds"] >= 2 for p in pts), \
         [p.screen for p in pts]
     # and every multi-round point grew its working set beyond its nnz floor
     for p in pts:
         assert p.screen["active"] >= p.nnz
+
+
+def test_blitz_carry_matches_reset_path(path_glm):
+    """The carried/budgeted working set (default) is a pure acceleration:
+    per-lambda solutions match the reset-every-lambda path, the working
+    set never shrinks across the path, and no point pays more KKT rounds
+    in total."""
+    X, y = path_glm.X_train, path_glm.y_train
+    opts = DGLMNETOptions(num_blocks=4, tile=32, max_iters=150, rel_tol=1e-8)
+    reset = regularization_path(X, y, path_len=8, opts=opts, screen=True,
+                                carry_working_set=False,
+                                violation_budget=None)
+    blitz = regularization_path(X, y, path_len=8, opts=opts, screen=True)
+    actives = [p.screen["active"] for p in blitz]
+    assert actives == sorted(actives), actives     # monotone growth
+    assert sum(p.screen["kkt_rounds"] for p in blitz) <= \
+        sum(p.screen["kkt_rounds"] for p in reset)
+    for pr, pb in zip(reset, blitz):
+        assert abs(pb.nnz - pr.nnz) <= 2, (pb.lam, pb.nnz, pr.nnz)
+        rel = abs(pb.f - pr.f) / max(abs(pr.f), 1e-9)
+        assert rel < 1e-4, (pb.lam, pb.f, pr.f)
+
+
+def test_budgeted_admission_takes_top_violators():
+    from repro.core.screening import budgeted_admission
+
+    g = jnp.asarray([9.0, 1.0, 5.0, 7.0, 3.0, 8.0])
+    viol = jnp.asarray([True, True, False, True, True, True])
+    # budget 2: only the two strongest violators (9.0 and 8.0) enter;
+    # 5.0 is not a violator and must never be admitted
+    adm = budgeted_admission(viol, g, 2)
+    np.testing.assert_array_equal(
+        np.asarray(adm), [True, False, False, False, False, True])
+    # budget >= violator count: pass-through
+    adm_all = budgeted_admission(viol, g, 16)
+    np.testing.assert_array_equal(np.asarray(adm_all), np.asarray(viol))
+    # ties at the cutoff are all admitted (growth rate, not exact count)
+    g_tie = jnp.asarray([4.0, 4.0, 4.0, 1.0])
+    viol_tie = jnp.asarray([True, True, True, True])
+    adm_tie = budgeted_admission(viol_tie, g_tie, 2)
+    np.testing.assert_array_equal(
+        np.asarray(adm_tie), [True, True, True, False])
 
 
 def test_sparse_screen_matches_dense(path_glm):
