@@ -74,8 +74,13 @@ def seed_style_path(X, y, path_len: int, opts: DGLMNETOptions):
     return rows
 
 
-def engine_path(X, y, path_len: int, opts: DGLMNETOptions):
-    pts = regularization_path(X, y, path_len=path_len, opts=opts, screen=True)
+def frontdoor_path(X, y, path_len: int, opts: DGLMNETOptions):
+    """The screened engine path through the ``repro.api`` front door
+    (``LogisticL1.path`` — what ``regularization_path`` now shims to)."""
+    from repro.api import DenseDesign, LogisticL1
+
+    pts = LogisticL1(opts=opts).path(DenseDesign(X), y, path_len=path_len,
+                                     screen=True)
     return [{"lam": p.lam, "nnz": p.nnz, "f": p.f, "n_iters": p.n_iters,
              **{f"screen_{k}": v for k, v in p.screen.items()}} for p in pts]
 
@@ -113,8 +118,8 @@ def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
 
     seed_rows, seed_cold = _timed(lambda: seed_style_path(X, y, path_len, opts))
     _, seed_warm = _timed(lambda: seed_style_path(X, y, path_len, opts))
-    eng_rows, eng_cold = _timed(lambda: engine_path(X, y, path_len, opts))
-    _, eng_warm = _timed(lambda: engine_path(X, y, path_len, opts))
+    eng_rows, eng_cold = _timed(lambda: frontdoor_path(X, y, path_len, opts))
+    _, eng_warm = _timed(lambda: frontdoor_path(X, y, path_len, opts))
 
     report = {
         "config": {"n": int(X.shape[0]), "p": int(X.shape[1]),
@@ -123,11 +128,14 @@ def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
                             "max_iters": opts.max_iters}},
         "seed_style": {"cold_s": seed_cold, "warm_s": seed_warm,
                        "per_lambda": seed_rows},
-        "engine": {"cold_s": eng_cold, "warm_s": eng_warm,
-                   "per_lambda": eng_rows},
+        # renamed from "engine" when the path moved behind the repro.api
+        # front door; compare_bench accepts either name so the checked-in
+        # baselines stay valid
+        "frontdoor": {"cold_s": eng_cold, "warm_s": eng_warm,
+                      "per_lambda": eng_rows},
         "speedup_warm": seed_warm / max(eng_warm, 1e-12),
         "speedup_cold": seed_cold / max(eng_cold, 1e-12),
-        "engine_strictly_faster": eng_warm < seed_warm,
+        "frontdoor_strictly_faster": eng_warm < seed_warm,
     }
     if distributed:
         from repro.launch.mesh import make_dev_mesh
@@ -163,9 +171,9 @@ def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
         # warm delta is exactly the chain-vs-blocked difference
         blk_opts = dataclasses.replace(opts, cycle_mode="blocked",
                                        block=block)
-        blk_rows, blk_cold = _timed(lambda: engine_path(X, y, path_len,
+        blk_rows, blk_cold = _timed(lambda: frontdoor_path(X, y, path_len,
                                                         blk_opts))
-        _, blk_warm = _timed(lambda: engine_path(X, y, path_len, blk_opts))
+        _, blk_warm = _timed(lambda: frontdoor_path(X, y, path_len, blk_opts))
         # acceptance: the blocked path must land on the sequential path's
         # objectives — the safeguard + line search make it an acceleration,
         # not an approximation
@@ -223,9 +231,9 @@ def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
     with open(out_path, "w") as fh:
         json.dump(report, fh, indent=2)
     print(f"# seed-style: cold {seed_cold:.2f}s warm {seed_warm:.2f}s")
-    print(f"# engine:     cold {eng_cold:.2f}s warm {eng_warm:.2f}s")
+    print(f"# frontdoor:  cold {eng_cold:.2f}s warm {eng_warm:.2f}s")
     print(f"# warm speedup {report['speedup_warm']:.2f}x "
-          f"(strictly faster: {report['engine_strictly_faster']})")
+          f"(strictly faster: {report['frontdoor_strictly_faster']})")
     print(f"# wrote {out_path}")
     return report
 
@@ -267,8 +275,8 @@ def main():
                  tiny=args.tiny)
     # Screening pays in proportion to p; tiny CI-smoke shapes sit below the
     # break-even point, so the strictly-faster gate applies to real shapes.
-    if not args.tiny and not report["engine_strictly_faster"]:
-        raise SystemExit("FAIL: engine path not strictly faster than seed-style")
+    if not args.tiny and not report["frontdoor_strictly_faster"]:
+        raise SystemExit("FAIL: front-door path not strictly faster than seed-style")
 
 
 if __name__ == "__main__":

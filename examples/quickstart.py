@@ -1,11 +1,13 @@
-"""Quickstart: L1-regularized logistic regression with d-GLMNET.
+"""Quickstart: L1-regularized logistic regression through the one front
+door (``repro.api.LogisticL1`` over a ``Design``).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
+from repro.api import DenseDesign, LogisticL1, SlabDesign, lambda_max_design
 from repro.configs.base import GLMConfig
-from repro.core import DGLMNETOptions, fit, lambda_max, regularization_path
+from repro.core import DGLMNETOptions
 from repro.data.synthetic import make_glm_dataset
 from repro.train.metrics import glm_eval_fn
 
@@ -14,25 +16,36 @@ def main():
     cfg = GLMConfig(name="quickstart", num_examples=8192, num_features=256,
                     density=1.0)
     ds = make_glm_dataset(cfg, jax.random.key(0))
-    X, y = ds.X_train, ds.y_train
-    lmax = float(lambda_max(X, y))
-    print(f"n={X.shape[0]}  p={X.shape[1]}  lambda_max={lmax:.2f}")
+    design = DenseDesign(ds.X_train)
+    y = ds.y_train
+    lmax = float(lambda_max_design(design, y))
+    n, p = design.shape
+    print(f"n={n}  p={p}  lambda_max={lmax:.2f}")
 
     # single solve, simulating 8 machines (feature blocks)
-    res = fit(X, y, lmax / 64,
-              opts=DGLMNETOptions(num_blocks=8, method="gram", tile=32),
-              verbose=True)
-    print(f"\nfit: f={res.f:.4f}  nnz={res.nnz}/{X.shape[1]}  "
+    est = LogisticL1(opts=DGLMNETOptions(num_blocks=8, method="gram", tile=32))
+    res = est.fit(design, y, lmax / 64, verbose=True)
+    print(f"\nfit: f={res.f:.4f}  nnz={res.nnz}/{p}  "
           f"iters={res.n_iters}  unit-step={res.unit_step_frac:.0%}")
+
+    # the same solve from the by-feature slab layout — one front door,
+    # any Design; the strategy resolver picks the execution
+    res_slab = est.fit(SlabDesign.from_dense(ds.X_train), y, lmax / 64)
+    print(f"slab layout: f={res_slab.f:.4f} (same solve, different Design)")
 
     # regularization path (paper Algorithm 5) with test metrics
     print("\nregularization path:")
-    pts = regularization_path(
-        X, y, path_len=8, opts=DGLMNETOptions(num_blocks=8, tile=32),
-        eval_fn=glm_eval_fn(ds.X_test, ds.y_test), verbose=True)
-    best = max(pts, key=lambda p: p.metrics["auprc"])
+    est = LogisticL1(opts=DGLMNETOptions(num_blocks=8, tile=32))
+    pts = est.path(design, y, path_len=8,
+                   eval_fn=glm_eval_fn(ds.X_test, ds.y_test), verbose=True)
+    best = max(pts, key=lambda pt: pt.metrics["auprc"])
     print(f"\nbest: lambda={best.lam:.3f} nnz={best.nnz} "
           f"AUPRC={best.metrics['auprc']:.4f}")
+
+    # score through the estimator (margins via the Design)
+    proba = est.predict_proba(DenseDesign(ds.X_test), beta=best.beta)
+    print(f"test P(y=+1) range: [{float(proba.min()):.3f}, "
+          f"{float(proba.max()):.3f}]")
 
 
 if __name__ == "__main__":

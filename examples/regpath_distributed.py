@@ -3,13 +3,16 @@ online learning via truncated gradient, full regularization path, on a mesh
 of 8 simulated devices (2 data x 4 model). The same code lowers on the
 production 16x16 mesh (see repro/launch/dryrun.py).
 
-Each distributed solve is one jitted while_loop on the mesh
-(core/engine.py) — no per-iteration host sync. The closing section runs
-the *distributed screened path* (strong rule + KKT post-check around
-fit_distributed / fit_distributed_sparse): the active-set gather reshards
+Everything runs through the one front door: ``repro.api.LogisticL1`` over
+``ShardedDesign``-wrapped layouts. Each distributed solve is one jitted
+while_loop on the mesh (core/engine.py) — no per-iteration host sync. The
+closing sections run the *distributed screened path* (strong rule + KKT
+post-check around mesh restricted solves): the active-set gather reshards
 the feature axis into a capacity-bucketed P(model) layout, and in the
 sparse flavor the screen streams by-feature (row_idx, values) slabs so no
-dense (n, p) X ever exists — the paper's webspam regime.
+dense (n, p) X ever exists — the paper's webspam regime — while per-lambda
+AUPRC streams from the mesh through a sharded *test* design
+(``make_design_eval``) instead of a replicated test matrix.
 
     python examples/regpath_distributed.py      # sets XLA flags itself
 """
@@ -23,9 +26,16 @@ if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro.api import (  # noqa: E402
+    DenseDesign,
+    LogisticL1,
+    ShardedDesign,
+    SlabDesign,
+    lambda_max_design,
+    make_design_eval,
+)
 from repro.configs.base import GLMConfig  # noqa: E402
-from repro.core import DGLMNETOptions, TGOptions, lambda_max  # noqa: E402
-from repro.core.distributed import fit_distributed  # noqa: E402
+from repro.core import DGLMNETOptions, TGOptions  # noqa: E402
 from repro.core.truncated_gradient import truncated_gradient_fit  # noqa: E402
 from repro.data.synthetic import make_glm_dataset  # noqa: E402
 from repro.launch.mesh import make_dev_mesh  # noqa: E402
@@ -39,22 +49,21 @@ def main():
     X, y = ds.X_train, ds.y_train
     n_trim = (X.shape[0] // 2) * 2
     X, y = X[:n_trim], y[:n_trim]
-    lmax = float(lambda_max(X, y))
     mesh = make_dev_mesh(2, 4)
+    design = ShardedDesign(DenseDesign(X), mesh, tile=64)
+    lmax = float(lambda_max_design(design, y))
     print(f"mesh={dict(mesh.shape)}  n={X.shape[0]}  p={X.shape[1]}")
 
     print("\n-- d-GLMNET path (feature-sharded over `model`, examples over `data`)")
-    beta = None
+    est = LogisticL1(opts=DGLMNETOptions(tile=64, max_iters=40),
+                     warm_start=True)
     best_d = 0.0
     for i in range(1, 9):
         lam = lmax * 2.0 ** (-i)
-        res = fit_distributed(
-            X, y, lam, mesh, beta0=beta,
-            opts=DGLMNETOptions(tile=64, max_iters=40))
-        beta = res.beta
-        ap = auprc(ds.X_test @ beta[: ds.X_test.shape[1]], ds.y_test)
+        res = est.fit(design, y, lam)           # warm-started from beta_
+        ap = auprc(ds.X_test @ res.beta[: ds.X_test.shape[1]], ds.y_test)
         best_d = max(best_d, ap)
-        nnz = int((jnp.abs(beta) > 0).sum())
+        nnz = int((jnp.abs(res.beta) > 0).sum())
         print(f"  lambda={lam:9.3f} nnz={nnz:5d} f={res.f:12.2f} "
               f"iters={res.n_iters:3d} AUPRC={ap:.4f}")
 
@@ -74,15 +83,14 @@ def main():
           f"-> {'d-GLMNET wins' if best_d >= best_tg else 'TG wins'} "
           f"(paper Figure 1 conclusion)")
 
-    print("\n-- distributed screened path (strong rule + KKT around "
-          "fit_distributed)")
+    print("\n-- distributed screened path (strong rule + KKT around mesh "
+          "restricted solves)")
     import time
 
-    from repro.core import regularization_path_distributed
-
     opts = DGLMNETOptions(tile=64, max_iters=40)
+    est = LogisticL1(opts=opts)
     t0 = time.perf_counter()
-    pts = regularization_path_distributed(X, y, mesh, path_len=8, opts=opts)
+    pts = est.path(design, y, path_len=8)
     dt = time.perf_counter() - t0
     for pt in pts:
         print(f"  lambda={pt.lam:9.3f} nnz={pt.nnz:5d} "
@@ -91,19 +99,24 @@ def main():
     print(f"  path wall-clock {dt:.2f}s (restricted solves stay on the "
           f"mesh, one compiled while_loop per capacity bucket)")
 
-    print("\n-- same path over by-feature sparse slabs (no dense X anywhere)")
-    from repro.data.byfeature import to_by_feature, to_slabs
-
+    print("\n-- same path over by-feature sparse slabs (no dense X anywhere),"
+          "\n   per-lambda AUPRC streamed from the mesh via a sharded test "
+          "design")
     dp = 2  # data extent of the dev mesh
-    row_idx, values, n_loc = to_slabs(to_by_feature(X), dp)
+    slab_design = ShardedDesign(SlabDesign.from_dense(X, dp), mesh, tile=64)
+    n_test = (ds.X_test.shape[0] // dp) * dp
+    eval_fn = make_design_eval(
+        SlabDesign.from_dense(ds.X_test[:n_test], dp), ds.y_test[:n_test],
+        mesh=mesh, tile=64)
     t0 = time.perf_counter()
-    pts_sp = regularization_path_distributed(
-        (row_idx, values), y, mesh, path_len=8, opts=opts)
+    pts_sp = est.path(slab_design, y, path_len=8, eval_fn=eval_fn)
     dt = time.perf_counter() - t0
     for pt, pt_sp in zip(pts, pts_sp):
         drift = abs(pt_sp.f - pt.f) / max(abs(pt.f), 1e-9)
         print(f"  lambda={pt_sp.lam:9.3f} nnz={pt_sp.nnz:5d} "
-              f"active={pt_sp.screen['active']:5d} |f-f_dense|/|f|={drift:.2e}")
+              f"active={pt_sp.screen['active']:5d} "
+              f"AUPRC={pt_sp.metrics['auprc']:.4f} "
+              f"|f-f_dense|/|f|={drift:.2e}")
     print(f"  sparse path wall-clock {dt:.2f}s "
           f"(screen streams (row_idx, values) slabs, psum over data axes)")
 

@@ -1,0 +1,24 @@
+"""repro.api — the one front door to every d-GLMNET solve.
+
+``Design`` abstracts the data layout (dense / slab / bucketed / mesh-
+sharded); ``LogisticL1`` is the estimator (fit / path / predict) whose
+strategy resolver picks kernels, cycle mode, capacities and local-vs-mesh
+execution in one place. The legacy entry points (``repro.core.fit``,
+``fit_distributed``, ``fit_distributed_sparse``, ``regularization_path``,
+``regularization_path_distributed``) are thin shims over this package.
+"""
+from repro.api.design import (  # noqa: F401
+    BucketedSlabDesign,
+    DenseDesign,
+    Design,
+    ShardedDesign,
+    SlabDesign,
+    as_design,
+)
+from repro.api.estimator import (  # noqa: F401
+    LogisticL1,
+    PathPoint,
+    lambda_max_design,
+    make_design_eval,
+)
+from repro.api.strategy import Strategy, mesh_programs, resolve  # noqa: F401

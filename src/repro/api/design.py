@@ -1,0 +1,691 @@
+"""The ``Design`` protocol: one abstraction over every data layout.
+
+Four PRs of scaling work left the solvers with three incompatible design-
+matrix layouts (dense ``X``, by-feature ``(row_idx, values)`` slabs,
+nnz-bucketed :class:`~repro.data.byfeature.SlabBuckets`) and the layout
+branching hardcoded into every driver. This module absorbs that branching:
+a *design* is anything that can answer the five questions the d-GLMNET
+machinery ever asks of the data —
+
+* ``margins(beta)``      — the O(n) state, X @ beta;
+* ``correlation(v)``     — the gradient pass, X^T v (screening, lambda_max);
+* ``gram_tile(w, r, start, width)`` — weighted Gram tile + correlation for
+  a feature window (the subproblem's statistics; the per-layout oracle the
+  fused solver programs are tested against);
+* ``gather``/``scatter`` — the active-set restriction and its inverse;
+* ``shape``/``layout``   — what the strategy resolver dispatches on.
+
+All public methods speak the **original feature axis**: masks, ``beta``
+and ``correlation`` outputs are ordered 0..p-1 regardless of any internal
+bucket permutation or mesh padding (the work-axis bookkeeping that used to
+leak into ``core/regpath.py`` is private to the designs).
+
+Implementations:
+
+* :class:`DenseDesign`        — (n, p) dense array.
+* :class:`SlabDesign`         — by-feature (p, DP, K) slabs, local row
+  indices with sentinel ``n_loc`` (DP = 1 is the single-shard form).
+* :class:`BucketedSlabDesign` — nnz-bucketed capacity classes
+  (:class:`~repro.data.byfeature.SlabBuckets`).
+* :class:`ShardedDesign`      — any of the above wrapped onto a JAX mesh:
+  margins/correlation become shard_map slab streams (psum over the data
+  axes), gather becomes the feature-axis reshard into a capacity-bucketed
+  P(model) layout. No dense (n, p) X ever materializes for slab layouts.
+
+``as_design`` coerces the historical entry-point operands (arrays,
+``ByFeature``, raw slab tuples, ``SlabBuckets``) into designs so the
+legacy API can delegate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import ClassVar, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.screening import gather_columns, scatter_columns
+from repro.data.byfeature import (
+    ByFeature,
+    SlabBuckets,
+    gather_features,
+    gather_features_buckets,
+    scatter_features,
+    take_features_buckets,
+    to_slabs,
+)
+
+
+@runtime_checkable
+class Design(Protocol):
+    """What every data layout must answer; see the module docstring."""
+
+    layout: str
+
+    @property
+    def shape(self) -> Tuple[int, int]: ...          # (n, p)
+
+    def margins(self, beta): ...                     # X @ beta -> (n,)
+
+    def correlation(self, v): ...                    # X^T v   -> (p,)
+
+    def gram_tile(self, w, r, start: int, width: int): ...  # (G, c)
+
+    def gather(self, beta, mask, cap: int, *, k_cap: Optional[int] = None):
+        ...                                          # (sub Design, beta_sub, idx)
+
+    def scatter(self, beta_sub, idx): ...            # -> full beta (p,)
+
+
+# ---------------------------------------------------------------------------
+# DenseDesign
+# ---------------------------------------------------------------------------
+
+@dataclass(eq=False)
+class DenseDesign:
+    """Dense (n, p) design matrix — the paper's epsilon/gisette regime."""
+
+    X: jnp.ndarray
+    layout: ClassVar[str] = "dense"
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (int(self.X.shape[0]), int(self.X.shape[1]))
+
+    def margins(self, beta):
+        return self.X @ beta
+
+    def correlation(self, v):
+        return self.X.T @ v
+
+    def gram_tile(self, w, r, start: int, width: int):
+        n = self.X.shape[0]
+        Xf = jax.lax.dynamic_slice(self.X, (0, start), (n, width))
+        wXf = w[:, None] * Xf
+        return Xf.T @ wXf, wXf.T @ r
+
+    def gather(self, beta, mask, cap: int, *, k_cap: Optional[int] = None):
+        X_sub, beta_sub, idx = gather_columns(self.X, beta, mask, cap)
+        return DenseDesign(X_sub), beta_sub, idx
+
+    def scatter(self, beta_sub, idx):
+        return scatter_columns(beta_sub, idx, self.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# SlabDesign
+# ---------------------------------------------------------------------------
+
+def _slab_front_packed(row_idx, n_loc: int) -> bool:
+    """Whether every slab's K axis is front-packed (live slots first).
+    Only front-packed slabs are eligible for the positional K-capacity
+    trim (``gather_features(..., k_cap)``)."""
+    valid = row_idx < n_loc
+    return bool(jnp.all(valid[..., 1:] <= valid[..., :-1]))
+
+
+@dataclass(eq=False)
+class SlabDesign:
+    """By-feature (p, DP, K) slabs with *local* row indices (sentinel
+    ``n_loc``) — the paper's Table-1 layout keyed for DP data shards.
+    DP = 1 is the plain single-process by-feature form."""
+
+    row_idx: jnp.ndarray         # (p, DP, K) int32
+    values: jnp.ndarray          # (p, DP, K) float32
+    n: int                       # global example count (= DP * n_loc)
+    front_packed: bool = True
+    layout: ClassVar[str] = "slab"
+
+    @classmethod
+    def from_by_feature(cls, bf: ByFeature, dp: int = 1) -> "SlabDesign":
+        row_idx, values, _ = to_slabs(bf, dp)
+        return cls(row_idx, values, bf.n, front_packed=True)
+
+    @classmethod
+    def from_dense(cls, X, dp: int = 1) -> "SlabDesign":
+        from repro.data.byfeature import to_by_feature
+
+        return cls.from_by_feature(to_by_feature(X), dp)
+
+    @property
+    def dp(self) -> int:
+        return int(self.row_idx.shape[1])
+
+    @property
+    def n_loc(self) -> int:
+        return self.n // max(self.dp, 1)
+
+    @property
+    def k(self) -> int:
+        return int(self.row_idx.shape[2])
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n, int(self.row_idx.shape[0]))
+
+    def _shard(self, v, s: int):
+        return jax.lax.dynamic_slice(v, (s * self.n_loc,), (self.n_loc,))
+
+    def margins(self, beta):
+        from repro.kernels.ops import slab_spmv
+
+        parts = [
+            slab_spmv(self.row_idx[:, s], self.values[:, s], beta,
+                      n_loc=self.n_loc)
+            for s in range(self.dp)
+        ]
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    def correlation(self, v):
+        from repro.kernels.ops import slab_corr
+
+        g = None
+        for s in range(self.dp):
+            gs = slab_corr(self.row_idx[:, s], self.values[:, s],
+                           self._shard(v, s))
+            g = gs if g is None else g + gs
+        return g
+
+    def gram_tile(self, w, r, start: int, width: int):
+        from repro.kernels.ops import slab_gram
+
+        G = c = None
+        for s in range(self.dp):
+            rows = jax.lax.dynamic_slice(
+                self.row_idx, (start, s, 0), (width, 1, self.k))[:, 0]
+            vals = jax.lax.dynamic_slice(
+                self.values, (start, s, 0), (width, 1, self.k))[:, 0]
+            Gs, cs = slab_gram(rows, vals, self._shard(w, s),
+                               self._shard(r, s))
+            G = Gs if G is None else G + Gs
+            c = cs if c is None else c + cs
+        return G, c
+
+    def gather(self, beta, mask, cap: int, *, k_cap: Optional[int] = None):
+        rows_sub, vals_sub, beta_sub, idx = gather_features(
+            self.row_idx, self.values, beta, mask, cap,
+            sentinel=self.n_loc, k_cap=k_cap,
+        )
+        sub = SlabDesign(rows_sub, vals_sub, self.n,
+                         front_packed=self.front_packed)
+        return sub, beta_sub, idx
+
+    def scatter(self, beta_sub, idx):
+        return scatter_features(beta_sub, idx, self.shape[1])
+
+    def k_per_feature(self) -> np.ndarray:
+        """Host (p,) max live slots per feature over shards — the K-class
+        selector for restricted solves (front-packed slabs only)."""
+        return np.asarray(
+            (np.asarray(self.row_idx) < self.n_loc).sum(axis=-1).max(axis=-1))
+
+    def densify(self):
+        """Dense (n, p) oracle/fallback — per data shard, the kernel
+        layer's reference scatter (``kernels.ref._densify_slab``, the one
+        definition of the sentinel/duplicate-row semantics), rows stacked
+        in shard order. Cached: local solves (and screen=False paths)
+        reuse one materialization per design."""
+        dense = getattr(self, "_dense_cache", None)
+        if dense is None:
+            from repro.kernels.ref import _densify_slab
+
+            parts = [
+                _densify_slab(self.row_idx[:, s], self.values[:, s],
+                              self.n_loc)
+                for s in range(self.dp)
+            ]
+            dense = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            object.__setattr__(self, "_dense_cache", dense)
+        return dense
+
+
+# ---------------------------------------------------------------------------
+# BucketedSlabDesign
+# ---------------------------------------------------------------------------
+
+@dataclass(eq=False)
+class BucketedSlabDesign:
+    """nnz-bucketed slab layout (:class:`SlabBuckets`): features grouped
+    into power-of-two K classes so storage is ~O(nnz). Public methods
+    speak the original feature order; the concatenated-bucket permutation
+    is private."""
+
+    slabs: SlabBuckets
+    n: int
+    front_packed: bool = True
+    layout: ClassVar[str] = "bucketed"
+
+    @classmethod
+    def from_by_feature(cls, bf: ByFeature, dp: int = 1,
+                        **kw) -> "BucketedSlabDesign":
+        from repro.data.byfeature import to_slab_buckets
+
+        return cls(to_slab_buckets(bf, dp, **kw), bf.n, front_packed=True)
+
+    @property
+    def dp(self) -> int:
+        return int(self.slabs.buckets[0][0].shape[1])
+
+    @property
+    def n_loc(self) -> int:
+        return self.slabs.n_loc
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n, self.slabs.p)
+
+    @property
+    def feat_order(self) -> np.ndarray:
+        order = getattr(self, "_feat_order", None)
+        if order is None:
+            order = self.slabs.feat_order
+            object.__setattr__(self, "_feat_order", order)
+        return order
+
+    @property
+    def inv_perm(self) -> np.ndarray:
+        inv = getattr(self, "_inv_perm", None)
+        if inv is None:
+            inv = np.empty(self.slabs.p, np.int64)
+            inv[self.feat_order] = np.arange(self.slabs.p)
+            object.__setattr__(self, "_inv_perm", inv)
+        return inv
+
+    def _flat(self) -> SlabDesign:
+        """Work-order flat slab view at the max K class (take, not copy,
+        when there is a single bucket)."""
+        flat = getattr(self, "_flat_cache", None)
+        if flat is None:
+            if len(self.slabs.buckets) == 1:
+                r_b, v_b, _ = self.slabs.buckets[0]
+            else:
+                k_max = max(self.slabs.k_classes)
+                idx = jnp.arange(self.slabs.p)
+                r_b, v_b = take_features_buckets(self.slabs, idx, k_max)
+            flat = SlabDesign(r_b, v_b, self.n,
+                              front_packed=self.front_packed)
+            object.__setattr__(self, "_flat_cache", flat)
+        return flat
+
+    def margins(self, beta):
+        beta_work = jnp.take(beta, jnp.asarray(self.feat_order))
+        return self._flat().margins(beta_work)
+
+    def correlation(self, v):
+        g_work = self._flat().correlation(v)
+        return jnp.take(g_work, jnp.asarray(self.inv_perm))
+
+    def gram_tile(self, w, r, start: int, width: int):
+        k_max = max(self.slabs.k_classes)
+        idx = jnp.asarray(self.inv_perm)[start: start + width]
+        rows, vals = take_features_buckets(self.slabs, idx, k_max)
+        return SlabDesign(rows, vals, self.n).gram_tile(w, r, 0, width)
+
+    def gather(self, beta, mask, cap: int, *, k_cap: Optional[int] = None):
+        order = jnp.asarray(self.feat_order)
+        mask_work = jnp.take(mask, order)
+        beta_work = jnp.take(beta, order)
+        if k_cap is None:
+            k_cap = max(self.slabs.k_classes)
+        rows_sub, vals_sub, beta_sub, idx = gather_features_buckets(
+            self.slabs, beta_work, mask_work, cap, k_cap)
+        sub = SlabDesign(rows_sub, vals_sub, self.n,
+                         front_packed=self.front_packed)
+        return sub, beta_sub, idx
+
+    def scatter(self, beta_sub, idx):
+        work_full = scatter_features(beta_sub, idx, self.slabs.p)
+        return jnp.take(work_full, jnp.asarray(self.inv_perm))
+
+    def k_per_feature(self) -> np.ndarray:
+        """Host (p,) per-feature max live slots, in *work* (bucket) order —
+        pairs with work-order masks inside :class:`ShardedDesign`."""
+        parts = [
+            np.asarray((np.asarray(r_b) < self.n_loc).sum(-1).max(-1))
+            for r_b, _, _ in self.slabs.buckets
+        ]
+        return np.concatenate(parts) if parts else np.zeros(0, np.int64)
+
+    def densify(self):
+        # flat view is work (bucket) order; column j of the original
+        # matrix sits at work position inv_perm[j]; cached like the
+        # SlabDesign densify (local solves call this once per lambda)
+        dense = getattr(self, "_dense_cache", None)
+        if dense is None:
+            dense = self._flat().densify()[:, jnp.asarray(self.inv_perm)]
+            object.__setattr__(self, "_dense_cache", dense)
+        return dense
+
+
+# ---------------------------------------------------------------------------
+# ShardedDesign
+# ---------------------------------------------------------------------------
+
+@dataclass(eq=False)
+class _MeshSlabState:
+    """Per-(design, tile) mesh residency: the padded, device-put work
+    buckets plus the work-axis bookkeeping the estimator's screened path
+    consumes. Built once, cached on the owning :class:`ShardedDesign`."""
+
+    work_buckets: tuple          # of (row_idx, values, feat_idx) on mesh
+    slabs_work: SlabBuckets
+    feat_map: jnp.ndarray        # (p_work,) original id per work pos, sentinel p
+    k_arr: jnp.ndarray           # (p_work,) per-feature max live slots
+    k_max: int
+    p_work: int
+    n_loc: int
+    cap_tile: int
+
+
+@dataclass(eq=False)
+class ShardedDesign:
+    """Any design wrapped onto a JAX mesh (axes ``model`` x data axes).
+
+    Slab layouts stream every margins/correlation pass under ``shard_map``
+    (``core.screening.make_sparse_corr`` / ``core.distributed
+    .make_slab_margins``) with a psum over the data axes, so no dense
+    (n, p) X — and for margins not even a replicated beta gather — ever
+    exists off the mesh. ``gather`` is the active-set feature reshard into
+    a capacity-bucketed P(model) layout. ``gram_tile`` delegates to the
+    wrapped design (it is the testing oracle; mesh execution uses the
+    fused solver programs the strategy resolver picks).
+
+    ``tile`` aligns the internal feature padding with the solver's Gram
+    tile (``DGLMNETOptions.tile``); results are tile-invariant, so the
+    default only matters for program-shape reuse.
+    """
+
+    inner: Design
+    mesh: object                 # jax.sharding.Mesh
+    tile: int = 128
+    _states: dict = field(default_factory=dict, init=False, repr=False)
+
+    def __post_init__(self):
+        if isinstance(self.inner, ShardedDesign):
+            raise TypeError("cannot wrap a ShardedDesign in a ShardedDesign")
+        if "model" not in self.mesh.axis_names:
+            raise ValueError(
+                f"mesh axes {self.mesh.axis_names} lack the 'model' axis the "
+                f"feature blocks map onto — build meshes via repro.launch.mesh"
+            )
+
+    @property
+    def layout(self) -> str:
+        return self.inner.layout
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.inner.shape
+
+    @property
+    def daxes(self):
+        from repro.core.distributed import _data_axes
+
+        return _data_axes(self.mesh)
+
+    @property
+    def ddim(self) -> int:
+        from repro.core.distributed import _data_extent
+
+        return _data_extent(self.mesh)
+
+    @property
+    def mdim(self) -> int:
+        return self.mesh.shape["model"]
+
+    def vsharding(self):
+        """The example-axis sharding (P over the data axes) for y/m."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return NamedSharding(self.mesh, P(self.daxes))
+
+    # -- mesh residency (slab layouts) ------------------------------------
+
+    def _as_buckets(self) -> SlabBuckets:
+        n = self.shape[0]
+        if isinstance(self.inner, SlabDesign):
+            # a flat slab pair is exactly a one-bucket layout; wrapping it
+            # keeps a single screened sparse driver (full validation runs
+            # in the per-bucket loop below)
+            p = self.inner.shape[1]
+            return SlabBuckets(
+                buckets=((self.inner.row_idx, self.inner.values,
+                          np.arange(p, dtype=np.int64)),),
+                n_loc=n // max(self.ddim, 1), p=p)
+        if isinstance(self.inner, BucketedSlabDesign):
+            return self.inner.slabs
+        raise TypeError(f"no slab form for layout {self.layout!r}")
+
+    def _mesh_state(self, tile: Optional[int] = None) -> _MeshSlabState:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core.distributed import check_slab_shapes
+
+        if tile is None:
+            # public methods don't care which alignment serves them (all
+            # results are tile-invariant, and gather/scatter consistently
+            # see the same first state) — reuse whatever residency exists
+            # rather than building a second O(nnz) copy of the slabs
+            if self._states:
+                return next(iter(self._states.values()))
+            tile = self.tile
+        st = self._states.get(tile)
+        if st is not None:
+            return st
+        n, p = self.shape
+        cap_tile = self.mdim * tile
+        slabs = self._as_buckets()
+        n_loc = slabs.n_loc
+        slab_sharding = NamedSharding(self.mesh, P("model", self.daxes, None))
+        work_buckets = []
+        feat_map_parts = []
+        k_arr_parts = []
+        for r_b, v_b, fid in slabs.buckets:
+            if check_slab_shapes(r_b, v_b, self.mesh, n) != n_loc:
+                raise ValueError("bucket n_loc inconsistent with mesh/n")
+            # pad each bucket's feature axis so the streaming screen's
+            # tile walk and every capacity bucket stay mesh-aligned;
+            # all-sentinel slabs have zero gradient and are never admitted
+            pad_b = (-r_b.shape[0]) % cap_tile
+            if pad_b:
+                r_b = jnp.pad(r_b, ((0, pad_b), (0, 0), (0, 0)),
+                              constant_values=n_loc)
+                v_b = jnp.pad(v_b, ((0, pad_b), (0, 0), (0, 0)))
+            # k per feature on host *before* the slabs land sharded
+            k_arr_parts.append(
+                np.asarray((r_b < n_loc).sum(axis=-1).max(axis=-1)))
+            r_b = jax.device_put(r_b, slab_sharding)
+            v_b = jax.device_put(v_b, slab_sharding)
+            work_buckets.append((r_b, v_b, fid))
+            feat_map_parts.append(np.concatenate([
+                np.asarray(fid, np.int32),
+                np.full(pad_b, p, np.int32)]))
+        st = _MeshSlabState(
+            work_buckets=tuple(work_buckets),
+            slabs_work=SlabBuckets(tuple(work_buckets), n_loc, p),
+            feat_map=jnp.asarray(np.concatenate(feat_map_parts)),
+            k_arr=jnp.asarray(np.concatenate(k_arr_parts)),
+            k_max=max(b[0].shape[-1] for b in work_buckets),
+            p_work=sum(b[0].shape[0] for b in work_buckets),
+            n_loc=n_loc,
+            cap_tile=cap_tile,
+        )
+        self._states[tile] = st
+        return st
+
+    # -- Design protocol ---------------------------------------------------
+
+    def margins(self, beta):
+        if self.layout == "dense":
+            return self.inner.margins(beta)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core.distributed import make_slab_margins
+
+        st = self._mesh_state()
+        beta_work = jnp.take(jnp.asarray(beta, jnp.float32), st.feat_map,
+                             mode="fill", fill_value=0.0)
+        bsharding = NamedSharding(self.mesh, P("model"))
+        m = None
+        off = 0
+        for r_b, v_b, _ in st.work_buckets:
+            p_b = r_b.shape[0]
+            beta_b = jax.device_put(
+                jax.lax.dynamic_slice(beta_work, (off,), (p_b,)), bsharding)
+            m_b = make_slab_margins(self.mesh, st.n_loc)(r_b, v_b, beta_b)
+            m = m_b if m is None else m + m_b
+            off += p_b
+        return m                     # example-sharded P(data axes)
+
+    def correlation(self, v):
+        if self.layout == "dense":
+            return self.inner.correlation(v)
+        from repro.core.screening import make_sparse_corr
+        from repro.sharding.collect import concat_replicated
+
+        st = self._mesh_state()
+        tile = st.cap_tile // self.mdim
+        corr = make_sparse_corr(self.mesh, st.n_loc, tile)
+        # per-bucket P(model) pieces of different lengths: concatenating
+        # them sharded miscompiles on current JAX — the shared
+        # replicate-first guard is mandatory here (sharding/collect.py)
+        g_work = concat_replicated(
+            [corr(r_b, v_b, v) for r_b, v_b, _ in st.work_buckets], self.mesh)
+        p = self.shape[1]
+        return jnp.zeros(p, g_work.dtype).at[st.feat_map].set(
+            g_work, mode="drop")
+
+    def gram_tile(self, w, r, start: int, width: int):
+        return self.inner.gram_tile(w, r, start, width)
+
+    # -- work-axis fast path (estimator-internal) --------------------------
+    #
+    # The screened path driver runs in *work* (bucket-permuted, mesh-
+    # padded) order so every per-lambda pass is exactly the jitted units
+    # of the pre-API driver — one shard_map screen per bucket, no eager
+    # per-op dispatch on sharded arrays, no per-pass order conversion.
+    # Public protocol methods stay original-order; these three are the
+    # private bridge the estimator uses.
+
+    def _screen_abs_work(self, y, m, tile: Optional[int] = None):
+        """|X^T v(m, y)| in work order (p_work,): the per-bucket jitted
+        sparse screen, pieces collected via the replicate-first guard.
+
+        ``tile`` (default: the design's own) must match the state the
+        caller's masks live on — the estimator threads ``opts.tile``
+        through every work-axis helper so one work axis is in play even
+        when ``LogisticL1.opts.tile != design.tile``.
+        """
+        from repro.core.screening import make_sparse_screen
+        from repro.sharding.collect import concat_replicated
+
+        st = self._mesh_state(tile)
+        screen = make_sparse_screen(self.mesh, st.n_loc,
+                                    st.cap_tile // self.mdim)
+        return concat_replicated(
+            [screen(r_b, v_b, y, m) for r_b, v_b, _ in st.work_buckets],
+            self.mesh)
+
+    def _gather_work(self, beta_work, mask_work, cap: int, k_cap: int,
+                     tile: Optional[int] = None):
+        """Work-order active-set gather into a flat restricted design."""
+        st = self._mesh_state(tile)
+        rows_sub, vals_sub, beta_sub, idx = gather_features_buckets(
+            st.slabs_work, beta_work, mask_work, cap, k_cap)
+        front = (self.inner.front_packed
+                 if hasattr(self.inner, "front_packed") else True)
+        sub = ShardedDesign(
+            SlabDesign(rows_sub, vals_sub, self.shape[0], front_packed=front),
+            self.mesh, tile=self.tile if tile is None else tile)
+        return sub, beta_sub, idx
+
+    def _work_to_original(self, beta_work, tile: Optional[int] = None):
+        """Work-order coefficients -> original feature ids (mesh padding
+        rows dropped via the sentinel-p scatter)."""
+        st = self._mesh_state(tile)
+        p = self.shape[1]
+        return jnp.zeros(p, beta_work.dtype).at[st.feat_map].set(
+            beta_work, mode="drop")
+
+    def gather(self, beta, mask, cap: int, *, k_cap: Optional[int] = None):
+        if self.layout == "dense":
+            sub, beta_sub, idx = self.inner.gather(beta, mask, cap)
+            return ShardedDesign(sub, self.mesh, tile=self.tile), beta_sub, idx
+        st = self._mesh_state()
+        mask_work = jnp.take(jnp.asarray(mask), st.feat_map,
+                             mode="fill", fill_value=False)
+        beta_work = jnp.take(jnp.asarray(beta, jnp.float32), st.feat_map,
+                             mode="fill", fill_value=0.0)
+        return self._gather_work(beta_work, mask_work, cap,
+                                 st.k_max if k_cap is None else k_cap)
+
+    def scatter(self, beta_sub, idx):
+        if self.layout == "dense":
+            return self.inner.scatter(beta_sub, idx)
+        st = self._mesh_state()
+        return self._work_to_original(scatter_features(beta_sub, idx,
+                                                       st.p_work))
+
+
+# ---------------------------------------------------------------------------
+# coercion
+# ---------------------------------------------------------------------------
+
+_DESIGN_TYPES = (DenseDesign, SlabDesign, BucketedSlabDesign, ShardedDesign)
+
+
+def as_design(data, *, n: Optional[int] = None, mesh=None,
+              tile: int = 128) -> Design:
+    """Coerce a legacy entry-point operand into a :class:`Design`.
+
+    ``data`` may be a Design (passed through), a dense (n, p) array, a
+    :class:`~repro.data.byfeature.ByFeature`, a raw ``(row_idx, values)``
+    slab pair (front-packing is *detected* — user-built slabs may
+    interleave sentinel and live slots, which disables the positional
+    K-capacity trim instead of silently dropping live entries), or a
+    :class:`~repro.data.byfeature.SlabBuckets`. ``n`` is required for slab
+    forms that don't carry it. With ``mesh``, the result is wrapped in a
+    :class:`ShardedDesign`.
+    """
+    if isinstance(data, _DESIGN_TYPES):
+        d = data
+    elif isinstance(data, ByFeature):
+        if n is not None and data.n != n:
+            raise ValueError(f"ByFeature has n={data.n} but len(y)={n}")
+        dp = 1
+        if mesh is not None:
+            from repro.core.distributed import _data_extent
+
+            dp = _data_extent(mesh)
+        d = SlabDesign.from_by_feature(data, dp)
+    elif isinstance(data, SlabBuckets):
+        dp = int(data.buckets[0][0].shape[1]) if data.buckets else 1
+        d = BucketedSlabDesign(data, n=data.n_loc * dp, front_packed=True)
+    elif isinstance(data, tuple) and len(data) == 2:
+        row_idx, values = data
+        if n is None:
+            raise ValueError("raw (row_idx, values) slabs need n= (len(y))")
+        if mesh is not None:
+            from repro.core.distributed import _data_extent
+
+            n_loc = n // max(_data_extent(mesh), 1)
+        else:
+            dp = int(row_idx.shape[1]) if row_idx.ndim == 3 else 1
+            n_loc = n // max(dp, 1)
+        if row_idx.ndim == 2:
+            row_idx = row_idx[:, None, :]
+            values = values[:, None, :]
+        d = SlabDesign(row_idx, values, n,
+                       front_packed=_slab_front_packed(row_idx, n_loc))
+    elif hasattr(data, "ndim") and data.ndim == 2:
+        d = DenseDesign(data)
+    else:
+        raise TypeError(
+            f"cannot build a Design from {type(data).__name__}: expected a "
+            f"dense (n, p) array, ByFeature, (row_idx, values) slabs, "
+            f"SlabBuckets, or a Design"
+        )
+    if mesh is not None and not isinstance(d, ShardedDesign):
+        d = ShardedDesign(d, mesh, tile=tile)
+    return d

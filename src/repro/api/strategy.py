@@ -1,0 +1,123 @@
+"""Strategy resolution: the ONE place ``(design.layout, mesh,
+DGLMNETOptions)`` maps to an execution plan.
+
+Before this module, every capability (blocked cycles, slab kernels,
+densify fallbacks, screening capacities) was threaded by hand through five
+entry points; a new scenario meant a sixth. Now a solve is described by a
+:class:`Strategy` — where it runs (local vs mesh), which subproblem family
+serves it (dense MXU vs sparse-native slab kernels, with the
+``prefer_slab_gram`` densify fallback), the resolved within-tile CD cycle,
+and the feature-capacity quantum restricted solves are bucketed to — and
+the resolver is the single audit point for all of it.
+
+Validation lives at the same altitude: option bundles are rejected here
+(and in ``DGLMNETOptions.__post_init__``) with actionable messages instead
+of surfacing as deep shard_map shape errors mid-trace.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+from repro.api.design import Design, ShardedDesign
+from repro.core.dglmnet import DGLMNETOptions
+
+
+@dataclass(frozen=True)
+class Strategy:
+    """Resolved execution plan for one solve/path."""
+
+    execution: str                  # "local" | "mesh"
+    solver: str                     # "dense" | "slab"
+    opts: DGLMNETOptions            # cycle_mode resolved to a concrete mode
+    cap_tile: int                   # feature-capacity quantum (screened path)
+    densify: Optional[bool] = None  # slab solver: force/forbid densify-once
+
+    def use_densify(self, n_loc: int, k: int) -> bool:
+        """Per-solve densify decision for the slab solver: the explicit
+        override wins, else the nnz-density heuristic
+        (``kernels.prefer_slab_gram``) at the solve's concrete (n_loc, K).
+        """
+        if self.densify is not None:
+            return self.densify
+        from repro.kernels.ops import prefer_slab_gram
+
+        return not prefer_slab_gram(n_loc, k)
+
+
+def _resolve_cycle(opts: DGLMNETOptions) -> DGLMNETOptions:
+    """``cycle_mode="auto"`` -> concrete mode (the ``prefer_blocked_cd``
+    tile-size heuristic) + eager blocked-cycle shape validation. Shared by
+    :func:`resolve` and :func:`mesh_programs` so live solves and dry-run
+    lowering can never resolve differently."""
+    cycle_mode = opts.cycle_mode
+    if cycle_mode == "auto":
+        from repro.kernels.ops import prefer_blocked_cd
+
+        cycle_mode = ("blocked" if prefer_blocked_cd(opts.tile, opts.block)
+                      else "sequential")
+    if cycle_mode == "blocked" and opts.tile % opts.block:
+        raise ValueError(
+            f"blocked cycle needs block ({opts.block}) to divide tile "
+            f"({opts.tile}) — pick block in {{1, 2, 4, ...}} <= tile"
+        )
+    if cycle_mode != opts.cycle_mode:
+        opts = replace(opts, cycle_mode=cycle_mode)
+    return opts
+
+
+def resolve(design: Design, opts: DGLMNETOptions, *,
+            densify: Optional[bool] = None) -> Strategy:
+    """Pick the execution plan for ``design`` under ``opts``.
+
+    * local vs mesh comes from the design (:class:`ShardedDesign` or not);
+    * dense vs slab subproblems from ``design.layout`` (local slab layouts
+      densify once and ride the dense solver — slab streaming pays off on
+      the mesh, where a dense X may not exist at all);
+    * ``cycle_mode="auto"`` resolves to a concrete mode here (the
+      ``prefer_blocked_cd`` tile-size heuristic), so every downstream
+      consumer sees only "sequential" or "blocked";
+    * ``cap_tile`` is the capacity quantum restricted solves are bucketed
+      to: ``tile`` locally, ``model_dim * tile`` on a mesh (restricted
+      shapes stay mesh-aligned, O(log(p/tile)) programs per path).
+    """
+    sharded = isinstance(design, ShardedDesign)
+    execution = "mesh" if sharded else "local"
+    solver = "slab" if (sharded and design.layout in ("slab", "bucketed")) \
+        else "dense"
+    opts = _resolve_cycle(opts)
+    cap_tile = (design.mdim if sharded else 1) * opts.tile
+    return Strategy(execution=execution, solver=solver, opts=opts,
+                    cap_tile=cap_tile, densify=densify)
+
+
+def mesh_programs(mesh, opts: DGLMNETOptions, *, layout: str = "dense",
+                  n_loc: Optional[int] = None):
+    """The lowerable mesh programs for a layout/opts combo, resolved the
+    same way live solves are — the dry-run's front door
+    (``launch/dryrun.py`` lowers these at production-mesh scale without
+    data).
+
+    Returns ``(step, screen)``: ``step`` is the jitted distributed outer
+    iteration for the layout (``step(X|slabs..., y, beta, m, lam)``);
+    ``screen`` is the sparse strong-rule pass (slab layouts with ``n_loc``
+    given; ``None`` otherwise).
+    """
+    from repro.core.distributed import (
+        make_dglmnet_step,
+        make_dglmnet_step_sparse,
+    )
+
+    if layout not in ("dense", "slab", "bucketed"):
+        raise ValueError(f"unknown layout {layout!r}")
+    opts = _resolve_cycle(opts)
+    if layout == "dense":
+        step = make_dglmnet_step(mesh, opts)
+    else:
+        step = make_dglmnet_step_sparse(mesh, opts)
+    screen = None
+    if layout != "dense" and n_loc is not None:
+        from repro.core.screening import make_sparse_screen
+
+        screen = make_sparse_screen(mesh, n_loc, opts.tile)
+    return step, screen

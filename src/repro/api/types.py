@@ -1,0 +1,26 @@
+"""Leaf types shared by the front door and the legacy shims.
+
+Import-order note: ``repro.core.__init__`` imports ``core.regpath`` (a
+shim over :mod:`repro.api.estimator`), while the estimator imports half of
+``repro.core`` — a cycle if the shim needed the full estimator at import
+time. It only needs :class:`PathPoint`, so that lives here with no
+repro-internal imports at all.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+
+
+@dataclass
+class PathPoint:
+    """One regularization-path point (paper Algorithm 5)."""
+
+    lam: float
+    nnz: int
+    f: float
+    n_iters: int
+    beta: jnp.ndarray
+    metrics: dict = field(default_factory=dict)
+    screen: dict = field(default_factory=dict)   # active-set telemetry

@@ -16,7 +16,7 @@ The public entry points:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import lru_cache, partial
+from functools import lru_cache
 from typing import List, NamedTuple, Optional
 
 import jax
@@ -32,6 +32,10 @@ from repro.core.objective import (
     working_stats,
 )
 from repro.core.subproblem import solve_subproblem
+
+
+_CYCLE_MODES = ("sequential", "blocked", "auto")
+_METHODS = ("gram", "blocked", "residual", "jacobi")
 
 
 @dataclass(frozen=True)
@@ -50,6 +54,32 @@ class DGLMNETOptions:
     # safeguard), or "auto" (kernels.prefer_blocked_cd tile-size heuristic)
     cycle_mode: str = "sequential"
     block: int = 16                  # B: coordinates per semi-parallel block
+
+    def __post_init__(self):
+        # Eager validation with actionable messages — a bad bundle used to
+        # surface as a shape error from deep inside a shard_map trace.
+        if self.cycle_mode not in _CYCLE_MODES:
+            raise ValueError(
+                f"unknown cycle_mode {self.cycle_mode!r}: expected one of "
+                f"{_CYCLE_MODES} (the within-tile CD cycle flavour)"
+            )
+        if self.method not in _METHODS:
+            raise ValueError(
+                f"unknown method {self.method!r}: expected one of {_METHODS}"
+            )
+        if self.block < 1 or (self.block & (self.block - 1)):
+            raise ValueError(
+                f"block must be a power of two >= 1 (the Gershgorin "
+                f"safeguard halves it down to 1), got {self.block}"
+            )
+        if self.tile < 1:
+            raise ValueError(f"tile must be >= 1, got {self.tile}")
+        if self.num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {self.num_blocks}")
+        if self.n_cycles < 1:
+            raise ValueError(f"n_cycles must be >= 1, got {self.n_cycles}")
+        if self.max_iters < 1:
+            raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
 
 
 class FitState(NamedTuple):
@@ -150,27 +180,15 @@ def fit(
 ) -> FitResult:
     """Paper Algorithm 1 with the Algorithm 3 line search, the paper's
     convergence criterion and sparsity snap-back — run entirely on device
-    as one jitted while_loop (see core/engine.py)."""
-    n, p = X.shape
-    beta = jnp.zeros(p, jnp.float32) if beta0 is None else beta0.astype(jnp.float32)
-    m = margins(X, beta)
+    as one jitted while_loop (see core/engine.py).
 
-    state = _solver_for(opts)(X, y, beta, m, lam)
-    host, hist, alphas = engine.fetch(state)       # the one d2h transfer
-    it = int(host.it)
-    if verbose:
-        for k in range(1, it + 1):
-            print(f"  iter {k:3d}  f={hist[k]:.6f}  alpha={alphas[k - 1]:.4f}")
+    Legacy shim: delegates to the ``repro.api`` front door
+    (``LogisticL1(opts).fit(DenseDesign(X), ...)``), which owns the solve
+    body; results are bit-identical to the pre-API driver."""
+    from repro.api import DenseDesign, LogisticL1
 
-    return FitResult(
-        beta=state.beta,
-        f=hist[-1],
-        n_iters=it,
-        objective_history=hist,
-        alpha_history=alphas,
-        unit_step_frac=int(host.unit_steps) / max(it, 1),
-        converged=bool(host.converged),
-    )
+    return LogisticL1(opts=opts).fit(DenseDesign(X), y, lam, beta0=beta0,
+                                     verbose=verbose)
 
 
 def fit_python_loop(

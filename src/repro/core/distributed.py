@@ -28,12 +28,11 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import pcast_varying, shard_map
 from repro.core import engine
 from repro.core.dglmnet import DGLMNETOptions
-from repro.core.objective import margins
 from repro.core.subproblem import make_tile_solver
 
 
@@ -388,35 +387,16 @@ def fit_distributed(
     """Device-resident outer loop over the sharded subproblem (CPU-testable
     with fake devices; same code lowers on the production mesh). The whole
     solve is one jitted while_loop on the mesh — identical driver code to
-    the single-process ``fit`` (core/engine.py)."""
-    daxes = _data_axes(mesh)
-    n, p = X.shape
-    ddim = _data_extent(mesh)
-    mdim = mesh.shape["model"]
-    if n % ddim:
-        raise ValueError(
-            f"data extent {ddim} must divide n={n} (trim or pad upstream)"
-        )
-    # zero feature columns are safe padding: their coordinates stay at 0
-    pad = (-p) % (mdim * opts.tile)
-    if pad:
-        X = jnp.pad(X, ((0, 0), (0, pad)))
-        if beta0 is not None:
-            beta0 = jnp.pad(beta0, (0, pad))
-    xsharding = NamedSharding(mesh, P(daxes, "model"))
-    vsharding = NamedSharding(mesh, P(daxes))
-    bsharding = NamedSharding(mesh, P("model"))
+    the single-process ``fit`` (core/engine.py).
 
-    X = jax.device_put(X, xsharding)
-    y = jax.device_put(y, vsharding)
-    beta = (
-        jnp.zeros(X.shape[1], jnp.float32) if beta0 is None else beta0.astype(jnp.float32)
-    )
-    beta = jax.device_put(beta, bsharding)
-    m = jax.device_put(margins(X, beta), vsharding)
+    Legacy shim: delegates to the ``repro.api`` front door
+    (``LogisticL1`` over ``ShardedDesign(DenseDesign(X), mesh)``), which
+    owns the solve body; results are bit-identical to the pre-API driver."""
+    from repro.api import DenseDesign, LogisticL1, ShardedDesign
 
-    state = _solver_for(mesh, opts, "model")(X, y, beta, m, lam)
-    return _finish(state, p, pad, verbose, "dist")
+    design = ShardedDesign(DenseDesign(X), mesh, tile=opts.tile)
+    return LogisticL1(opts=opts).fit(design, y, lam, beta0=beta0,
+                                     verbose=verbose)
 
 
 def _finish(state, p: int, pad: int, verbose: bool,
@@ -462,48 +442,14 @@ def fit_distributed_sparse(
       solve* builds the sharded (n, p) block and the solve rides the
       dense MXU subproblem — instead of the old per-tile, per-iteration
       densify scatter that dominated the hot loop.
+
+    Legacy shim: delegates to the ``repro.api`` front door
+    (``LogisticL1`` over ``ShardedDesign(SlabDesign(...), mesh)``), which
+    owns the solve body; results are bit-identical to the pre-API driver.
     """
-    daxes = _data_axes(mesh)
-    n = y.shape[0]
-    n_loc = check_slab_shapes(row_idx, values, mesh, n)
-    mdim = mesh.shape["model"]
-    p = row_idx.shape[0]
-    # sentinel-row feature padding is safe: all-sentinel slabs contribute
-    # nothing to any Gram tile, so their coordinates stay at 0
-    pad = (-p) % (mdim * opts.tile)
-    if pad:
-        row_idx = jnp.pad(row_idx, ((0, pad), (0, 0), (0, 0)),
-                          constant_values=n_loc)
-        values = jnp.pad(values, ((0, pad), (0, 0), (0, 0)))
-        if beta0 is not None:
-            beta0 = jnp.pad(beta0, (0, pad))
-    slab_sharding = NamedSharding(mesh, P("model", daxes, None))
-    vsharding = NamedSharding(mesh, P(daxes))
-    bsharding = NamedSharding(mesh, P("model"))
+    from repro.api import LogisticL1, ShardedDesign, SlabDesign
 
-    row_idx = jax.device_put(row_idx, slab_sharding)
-    values = jax.device_put(values, slab_sharding)
-    y = jax.device_put(y, vsharding)
-    beta = (
-        jnp.zeros(row_idx.shape[0], jnp.float32)
-        if beta0 is None else beta0.astype(jnp.float32)
-    )
-    beta = jax.device_put(beta, bsharding)
-    if beta0 is None:
-        m = jax.device_put(jnp.zeros(n, jnp.float32), vsharding)
-    else:
-        m = make_slab_margins(mesh, n_loc)(row_idx, values, beta)
-
-    if densify is None:
-        from repro.kernels.ops import prefer_slab_gram
-
-        densify = not prefer_slab_gram(n_loc, row_idx.shape[2])
-    if densify:
-        X = make_slab_densifier(mesh, n_loc)(row_idx, values)
-        state = _solver_for(mesh, opts, "model")(X, y, beta, m, lam)
-        return _finish(state, p, pad, verbose, "dist-sparse-dense")
-
-    state = _solver_sparse_for(mesh, opts, "model")(
-        (row_idx, values), y, beta, m, lam
-    )
-    return _finish(state, p, pad, verbose, "dist-sparse")
+    design = ShardedDesign(
+        SlabDesign(row_idx, values, int(y.shape[0])), mesh, tile=opts.tile)
+    return LogisticL1(opts=opts).fit(design, y, lam, beta0=beta0,
+                                     verbose=verbose, densify=densify)

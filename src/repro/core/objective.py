@@ -59,8 +59,15 @@ def lambda_max(X: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     """Smallest lambda for which beta* = 0 (Algorithm 5 start).
 
     At beta=0: p=0.5, w=1/4, z=2y  =>  |sum_i w x_ij z| = |0.5 sum_i x_ij y_i|.
+
+    Delegates to the one ``Design.correlation``-based implementation
+    (``repro.api.lambda_max_design``) so the dense entry and the sparse
+    screen's m = 0 pass can never drift apart (lazy import: api sits above
+    this module).
     """
-    return jnp.max(jnp.abs(0.5 * (X.T @ y)))
+    from repro.api import DenseDesign, lambda_max_design
+
+    return lambda_max_design(DenseDesign(X), y)
 
 
 def soft_threshold(x: jnp.ndarray, a) -> jnp.ndarray:

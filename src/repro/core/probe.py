@@ -7,16 +7,12 @@ modern deployment of the paper's problem class (n large, p = d_model).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.dglmnet import DGLMNETOptions, FitResult, fit
-from repro.core.objective import lambda_max
-from repro.core.regpath import regularization_path
-from repro.models.params import forward
+from repro.core.dglmnet import DGLMNETOptions, FitResult
 
 
 def extract_features(params, cfg: ModelConfig, tokens: jnp.ndarray,
@@ -79,14 +75,18 @@ def train_sparse_probe(
     lam: Optional[float] = None,
     opts: DGLMNETOptions = DGLMNETOptions(num_blocks=8, tile=32),
 ) -> FitResult:
-    X = features.astype(jnp.float32)
+    from repro.api import DenseDesign, LogisticL1, lambda_max_design
+
+    design = DenseDesign(features.astype(jnp.float32))
     if lam is None:
-        lam = float(lambda_max(X, labels)) / 64
-    return fit(X, labels, lam, opts=opts)
+        lam = float(lambda_max_design(design, labels)) / 64
+    return LogisticL1(opts=opts).fit(design, labels, lam)
 
 
 def probe_path(features, labels, *, path_len=10, opts=None, eval_fn=None):
+    from repro.api import DenseDesign, LogisticL1
+
     opts = opts or DGLMNETOptions(num_blocks=8, tile=32)
-    return regularization_path(
-        features.astype(jnp.float32), labels, path_len=path_len, opts=opts,
-        eval_fn=eval_fn)
+    return LogisticL1(opts=opts).path(
+        DenseDesign(features.astype(jnp.float32)), labels,
+        path_len=path_len, eval_fn=eval_fn)

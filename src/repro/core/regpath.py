@@ -1,179 +1,32 @@
-"""Regularization path (paper Algorithm 5) — warm-started, screened engine.
+"""Regularization path (paper Algorithm 5) — legacy shims.
 
-Find lambda_max for which beta = 0, then solve with
-lambda = lambda_max * 2^{-i}, i = 1..path_len, warm-starting each solve from
-the previous beta.
+The warm-started, screened path engine now lives behind the one front
+door, ``repro.api.LogisticL1.path``: a layout-agnostic strong-rule/KKT
+driver over the :class:`~repro.api.design.Design` protocol (dense, slab,
+bucketed, mesh-sharded), with capacity-bucketed restricted solves,
+blitz-style working-set carry and per-lambda metric streaming. Both
+functions here delegate to it — they exist so the historical signatures
+(`regularization_path(X, y, ...)`,
+`regularization_path_distributed(data, y, mesh, ...)`) keep working, and
+are tested bit-identical against the front door.
 
-Beyond the seed's loop-of-fits, the engine exploits the two pieces of
-path-level structure the follow-up literature (Mahajan et al. 1405.4544,
-Trofimov & Genkin 1611.02101) identifies as decisive for distributed L1:
-
-* **One compiled program for the whole path** — lam is a traced operand of
-  the device-resident solver (core/engine.py), so consecutive lambdas reuse
-  the same jitted while_loop; restricted problems are bucketed to
-  power-of-two capacities so at most O(log(p/tile)) shapes ever compile.
-* **Sequential-strong-rule screening with a KKT post-check**
-  (core/screening.py) — each solve only pays for the features the strong
-  rule admits at that lambda (plus warm-start support); the discarded set
-  is certified optimal afterwards via the full-gradient KKT condition, and
-  violators (rare) re-enter and re-solve. Large-p path points cost
-  O(active) instead of O(p).
-
-Both drivers share one strong-rule/KKT loop (:func:`_screened_point`):
-
-* :func:`regularization_path` — single-process restricted solves
-  (``core.dglmnet.fit``), dense gradient pass.
-* :func:`regularization_path_distributed` — restricted solves are
-  ``fit_distributed`` / ``fit_distributed_sparse`` on a mesh; the
-  active-set gather becomes a feature-axis reshard into a
-  capacity-bucketed P(model) layout, and with by-feature sparse slabs the
-  screen streams (row_idx, values) tiles under shard_map (psum over the
-  data axes) so a dense (n, p) X is never materialized anywhere — the
-  paper's headline webspam regime (p = 16.6M).
+``regularization_path_distributed`` accepts every historical operand: a
+dense (n, p) X, a :class:`~repro.data.byfeature.ByFeature`, a raw
+``(row_idx, values)`` slab pair of shape (p, DP, K) with local row
+indices, or an nnz-bucketed :class:`~repro.data.byfeature.SlabBuckets`
+layout — ``repro.api.as_design`` performs the coercion (including the
+front-packing detection that gates the slab K-capacity trim).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.dglmnet import DGLMNETOptions, FitResult, fit
-from repro.core.distributed import (
-    DistributedFitResult,
-    check_slab_shapes,
-    fit_distributed,
-    fit_distributed_sparse,
-)
-from repro.core.objective import lambda_max, margins, objective
-from repro.core.screening import (
-    budgeted_admission,
-    capacity_bucket,
-    gather_columns,
-    kkt_violations,
-    make_sparse_screen,
-    nll_grad_abs,
-    scatter_columns,
-    strong_rule_mask,
-)
-from repro.data.byfeature import ByFeature, SlabBuckets, scatter_features
+from repro.core.dglmnet import DGLMNETOptions
 
-
-@dataclass
-class PathPoint:
-    lam: float
-    nnz: int
-    f: float
-    n_iters: int
-    beta: jnp.ndarray
-    metrics: dict = field(default_factory=dict)
-    screen: dict = field(default_factory=dict)   # active-set telemetry
-
-
-def _lambda_grid(lmax: float, path_len: int,
-                 extra_lams: Optional[List[float]]) -> List[float]:
-    lams = [lmax * 2.0 ** (-i) for i in range(1, path_len + 1)]
-    if extra_lams:
-        lams = sorted(set(lams) | set(extra_lams), reverse=True)
-    return lams
-
-
-def _screened_point(p, lam, lam_prev, beta, m, *, grad_abs, restricted_solve,
-                    empty_result, cap_tile, kkt_tol, max_kkt_rounds,
-                    prev_mask=None, violation_budget: Optional[int] = 512):
-    """One path point of the strong-rule/KKT loop, solver-agnostic.
-
-    ``grad_abs(m) -> |g|`` is the full-gradient pass (dense matvec or the
-    sharded slab stream); ``restricted_solve(mask, cap, beta) -> (res,
-    beta_full, m_full)`` solves the capacity-``cap`` restricted problem
-    warm-started from ``beta``. Only the active-set and violation *counts*
-    are synced to host (to pick the capacity bucket and decide
-    termination) — the solves themselves stay device-resident.
-
-    Blitz-style dynamic working-set growth (Johnson & Guestrin; ROADMAP
-    follow-on): ``prev_mask`` carries the working set across path points
-    instead of resetting it to the strong rule each lambda — previously
-    admitted violators that solved to zero would otherwise be dropped,
-    violate again at the next lambda, and cost a re-solve round. Within a
-    point, violators re-enter under a per-round budget of
-    ``min(violation_budget, 2 * |A|)`` (the strongest first), so one bad
-    screen can't blow the capacity bucket up a power-of-two step. The final
-    certification is unchanged: the loop only exits on a clean KKT pass
-    over everything outside the working set (the penultimate round lifts
-    the budget so certification can always complete within
-    ``max_kkt_rounds``). Returns the certified mask alongside the result
-    for the driver to carry.
-    """
-    g_abs = grad_abs(m)
-    mask = strong_rule_mask(g_abs, lam, lam_prev, beta)
-    if prev_mask is not None:
-        mask = jnp.logical_or(mask, prev_mask)
-
-    res = None
-    rounds = 0
-    cap = 0
-    deferred = 0
-    for rounds in range(1, max_kkt_rounds + 1):
-        count = int(mask.sum())
-        if count == 0:
-            # empty working set: beta stays 0 (strong rule + no support)
-            beta_new, m_new = beta, m
-            res = empty_result(beta)
-        else:
-            cap = capacity_bucket(count, p, tile=cap_tile)
-            res, beta_new, m_new = restricted_solve(mask, cap, beta)
-        g_abs = grad_abs(m_new)
-        viol = kkt_violations(g_abs, lam, mask, tol=kkt_tol)
-        n_viol = int(viol.sum())
-        if n_viol == 0:
-            break
-        if violation_budget is not None and rounds < max_kkt_rounds - 1:
-            budget = min(violation_budget, 2 * max(count, 1))
-            admitted = budgeted_admission(viol, g_abs, budget)
-            # ties at the cutoff may admit more than the budget — count
-            # what actually stayed out, not the nominal overflow
-            deferred += n_viol - int(admitted.sum())
-        else:
-            admitted = viol                       # safety valve: admit all
-        mask = jnp.logical_or(mask, admitted)     # violators re-enter
-        beta, m = beta_new, m_new                 # keep this round's progress
-    else:
-        raise RuntimeError(
-            f"KKT check failed to certify within {max_kkt_rounds} rounds "
-            f"at lambda={lam} (last violation count > 0)"
-        )
-
-    info = {"active": int(mask.sum()), "capacity": cap, "kkt_rounds": rounds,
-            "deferred": deferred}
-    return res, beta_new, m_new, info, mask
-
-
-def _fit_screened(X, y, lam, lam_prev, beta, m, opts, *, kkt_tol,
-                  max_kkt_rounds, prev_mask=None, violation_budget=512):
-    """Single-process path point: strong-rule restricted ``fit`` + KKT
-    certification. Returns (res, beta_full, m_full, info, mask)."""
-    n, p = X.shape
-
-    def grad_abs(m_cur):
-        return nll_grad_abs(X, y, m_cur)
-
-    def restricted_solve(mask, cap, beta_cur):
-        X_sub, beta_sub, idx = gather_columns(X, beta_cur, mask, cap)
-        res = fit(X_sub, y, lam, beta0=beta_sub, opts=opts)
-        beta_full = scatter_columns(res.beta, idx, p)
-        return res, beta_full, X_sub @ res.beta   # == X @ beta_full (pads 0)
-
-    def empty_result(beta_cur):
-        return FitResult(beta=beta_cur, f=float("nan"), n_iters=0,
-                         objective_history=[], alpha_history=[])
-
-    return _screened_point(
-        p, lam, lam_prev, beta, m, grad_abs=grad_abs,
-        restricted_solve=restricted_solve, empty_result=empty_result,
-        cap_tile=opts.tile, kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
-        prev_mask=prev_mask, violation_budget=violation_budget,
-    )
+# re-export: PathPoint moved to repro.api with the path engine
+from repro.api.types import PathPoint  # noqa: F401
 
 
 def regularization_path(
@@ -191,56 +44,22 @@ def regularization_path(
     carry_working_set: bool = True,
     violation_budget: Optional[int] = 512,
 ) -> List[PathPoint]:
-    """Returns one PathPoint per lambda (decreasing). ``eval_fn(beta)``
-    computes test metrics (e.g. AUPRC) per point — the paper's Figure 1.
+    """Single-process path: one PathPoint per lambda (decreasing).
+    ``eval_fn(beta)`` computes test metrics (e.g. AUPRC) per point — the
+    paper's Figure 1. ``screen=False`` reproduces the seed's full-p
+    warm-started loop (the oracle the screening tests compare against).
 
-    ``screen=True`` (default) runs the strong-rule/KKT engine; ``False``
-    reproduces the seed's full-p warm-started loop (the oracle the
-    screening tests compare against). ``carry_working_set`` grows the
-    working set blitz-style across path points (the certified set at each
-    lambda seeds the next) instead of resetting to the strong rule;
-    ``violation_budget`` caps per-round violator admission at
-    ``min(budget, 2 * |A|)``. Both cut re-solve rounds near the dense end
-    of the path; set ``carry_working_set=False, violation_budget=None``
-    for the pre-blitz reset-every-lambda behaviour.
+    Legacy shim over ``LogisticL1(opts).path(DenseDesign(X), y, ...)``.
     """
-    lmax = float(lambda_max(X, y))
-    lams = _lambda_grid(lmax, path_len, extra_lams)
+    from repro.api import DenseDesign, LogisticL1
 
-    n, p = X.shape
-    beta = jnp.zeros(p, jnp.float32)
-    m = jnp.zeros(n, jnp.float32)
-    lam_prev = lmax
-    carry_mask = None
-    points: List[PathPoint] = []
-    for lam in lams:
-        if screen:
-            res, beta, m, info, mask = _fit_screened(
-                X, y, lam, lam_prev, beta, m, opts,
-                kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
-                prev_mask=carry_mask, violation_budget=violation_budget,
-            )
-            if carry_working_set:
-                carry_mask = mask
-        else:
-            res = fit(X, y, lam, beta0=beta, opts=opts)
-            beta = res.beta
-            m = margins(X, beta)
-            info = {}
-        lam_prev = lam
-        nnz = int(jnp.sum(jnp.abs(beta) > 0))
-        f = float(res.f) if res.n_iters else float(objective(m, y, beta, lam))
-        metrics = eval_fn(beta) if eval_fn else {}
-        points.append(
-            PathPoint(lam=lam, nnz=nnz, f=f, n_iters=res.n_iters,
-                      beta=beta, metrics=metrics, screen=info)
-        )
-        if verbose:
-            print(
-                f"lambda={lam:10.4f} nnz={nnz:6d} f={points[-1].f:12.4f} "
-                f"iters={res.n_iters:3d} {info} {metrics}"
-            )
-    return points
+    return LogisticL1(opts=opts).path(
+        DenseDesign(X), y, path_len=path_len, eval_fn=eval_fn,
+        extra_lams=extra_lams, verbose=verbose, screen=screen,
+        kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
+        carry_working_set=carry_working_set,
+        violation_budget=violation_budget,
+    )
 
 
 def regularization_path_distributed(
@@ -259,208 +78,22 @@ def regularization_path_distributed(
     violation_budget: Optional[int] = 512,
 ) -> List[PathPoint]:
     """The screened path with every restricted solve on the mesh
-    (Algorithm 5 run distributed — the paper's webspam-scale regime).
-    ``carry_working_set`` / ``violation_budget`` are the blitz-style
-    working-set growth knobs shared with :func:`regularization_path`.
+    (Algorithm 5 run distributed — the paper's webspam-scale regime). In
+    the sparse forms the strong-rule/KKT gradient passes stream the slabs
+    under shard_map and the active-set gather/scatter operates on slabs,
+    so no dense (n, p) X is ever materialized on host; restricted solves
+    additionally trim the slab capacity axis to the working set's own
+    power-of-two K class.
 
-    ``data`` is either a dense (n, p) X (restricted solves are
-    ``fit_distributed``), a :class:`~repro.data.byfeature.ByFeature`, a
-    pre-built ``(row_idx, values)`` slab pair of shape (p, DP, K) with
-    local row indices, or an nnz-bucketed
-    :class:`~repro.data.byfeature.SlabBuckets` layout (restricted solves
-    are ``fit_distributed_sparse``). In the sparse forms the
-    strong-rule/KKT gradient passes stream the slabs under shard_map
-    (``core.screening.make_sparse_screen``, per capacity class when
-    bucketed) and the active-set gather/scatter operates on slabs
-    (``data.byfeature.gather_features``), so no dense (n, p) X is ever
-    materialized on host. Restricted solves additionally trim the slab
-    capacity axis to the working set's own power-of-two K class
-    (``data.byfeature.k_class``): light working sets stop paying the
-    power-law head's global max-nnz padding, and sufficiently sparse ones
-    drop into the sparse-native slab kernels
-    (``kernels.slab_gram``/``slab_spmv``) instead of densifying.
-
-    The active-set gather is the feature-axis reshard: the working set's
-    columns/slabs are packed into a capacity-bucketed P(model) layout
-    (``capacity_bucket`` with tile ``model_dim * opts.tile``, so restricted
-    shapes stay mesh-aligned and at most O(log(p/tile)) programs compile),
-    and the restricted solution is scattered back to the full feature axis.
+    Legacy shim over ``LogisticL1(opts).path(as_design(data, mesh=...))``.
     """
-    import jax
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.api import LogisticL1, as_design
 
-    from repro.core.distributed import _data_axes, _data_extent
-
-    daxes = _data_axes(mesh)
-    ddim = _data_extent(mesh)
-    mdim = mesh.shape["model"]
-    cap_tile = mdim * opts.tile
-    n = y.shape[0]
-
-    known_packed = not isinstance(data, tuple)   # our own builders pack
-    if isinstance(data, ByFeature):
-        from repro.data.byfeature import to_slabs
-
-        if data.n != n:
-            raise ValueError(f"ByFeature has n={data.n} but len(y)={n}")
-        row_idx, values, _ = to_slabs(data, ddim)
-        data = (row_idx, values)
-
-    if isinstance(data, tuple):
-        # a flat (row_idx, values) pair is exactly a one-bucket layout;
-        # wrapping it keeps a single screened sparse driver below (the
-        # per-bucket loop runs the full shape/row-range validation)
-        row_idx, values = data
-        n_loc_flat = n // max(ddim, 1)
-        if known_packed:
-            front_packed = True
-        else:
-            # user-built slabs may interleave sentinel and live slots
-            # (nothing before this PR required packing); the k_cap trim
-            # slices the K axis positionally, so only front-packed slabs
-            # (what to_slabs emits) are eligible — otherwise solve at the
-            # full capacity
-            valid = row_idx < n_loc_flat
-            front_packed = bool(jnp.all(valid[..., 1:] <= valid[..., :-1]))
-        data = SlabBuckets(
-            buckets=((row_idx, values,
-                      np.arange(row_idx.shape[0], dtype=np.int64)),),
-            n_loc=n_loc_flat, p=row_idx.shape[0])
-    else:
-        # to_slab_buckets front-packs by construction; hand-built
-        # SlabBuckets must honor the invariant documented on the class
-        front_packed = True
-
-    sparse = isinstance(data, SlabBuckets)
-    to_output = None                   # work-axis beta -> original order
-    if sparse:
-        from repro.data.byfeature import gather_features_buckets, k_class
-
-        slabs: SlabBuckets = data
-        slab_sharding = NamedSharding(mesh, P("model", daxes, None))
-        vsharding = NamedSharding(mesh, P(daxes))
-        n_loc = slabs.n_loc
-        work_buckets = []
-        feat_map_parts = []
-        k_arr_parts = []
-        for r_b, v_b, fid in slabs.buckets:
-            if check_slab_shapes(r_b, v_b, mesh, n) != n_loc:
-                raise ValueError("bucket n_loc inconsistent with mesh/n")
-            # pad each bucket's feature axis so the streaming screen's
-            # tile walk and every capacity bucket stay mesh-aligned;
-            # all-sentinel slabs have zero gradient and are never admitted
-            pad_b = (-r_b.shape[0]) % cap_tile
-            if pad_b:
-                r_b = jnp.pad(r_b, ((0, pad_b), (0, 0), (0, 0)),
-                              constant_values=n_loc)
-                v_b = jnp.pad(v_b, ((0, pad_b), (0, 0), (0, 0)))
-            # k per feature on host *before* the slabs land sharded (and
-            # feature-axis concats below stay off-mesh: concatenating
-            # P(model)-sharded pieces of different lengths miscompiles on
-            # current JAX, so per-bucket screen outputs are resharded to
-            # replicated first — they are O(p) vectors the driver's
-            # elementwise mask math wants replicated anyway)
-            k_arr_parts.append(
-                np.asarray((r_b < n_loc).sum(axis=-1).max(axis=-1)))
-            r_b = jax.device_put(r_b, slab_sharding)
-            v_b = jax.device_put(v_b, slab_sharding)
-            work_buckets.append((r_b, v_b, fid))
-            feat_map_parts.append(np.concatenate([
-                np.asarray(fid, np.int32),
-                np.full(pad_b, slabs.p, np.int32)]))
-        slabs_work = SlabBuckets(tuple(work_buckets), n_loc, slabs.p)
-        p = slabs.p
-        p_work = sum(b[0].shape[0] for b in work_buckets)
-        feat_map = jnp.asarray(np.concatenate(feat_map_parts))  # sentinel p
-        k_arr = jnp.asarray(np.concatenate(k_arr_parts))
-        k_max = max(slabs_work.k_classes)
-        y = jax.device_put(y, vsharding)
-        screen_fn = make_sparse_screen(mesh, n_loc, opts.tile)
-        rsharding = NamedSharding(mesh, P())
-
-        def grad_abs(m_cur):
-            return jnp.concatenate([
-                jax.device_put(screen_fn(r_b, v_b, y, m_cur), rsharding)
-                for r_b, v_b, _ in work_buckets])
-
-        def make_restricted_solve(lam):
-            def restricted_solve(mask, cap, beta_cur):
-                # slab-capacity class of this working set: heavy features
-                # only make a solve pay for K they actually carry
-                if front_packed:
-                    k_need = int(jnp.max(jnp.where(mask, k_arr, 0)))
-                    k_cap = k_class(k_need, k_max)
-                else:
-                    k_cap = k_max
-                rows_sub, vals_sub, beta_sub, idx = gather_features_buckets(
-                    slabs_work, beta_cur, mask, cap, k_cap)
-                res = fit_distributed_sparse(
-                    rows_sub, vals_sub, y, lam, mesh, beta0=beta_sub,
-                    opts=opts)
-                return res, scatter_features(res.beta, idx, p_work), res.m
-            return restricted_solve
-
-        def to_output(beta_work):
-            # bucket-permuted work axis -> original feature ids (padding
-            # rows dropped via the sentinel-p scatter)
-            return jnp.zeros(p, beta_work.dtype).at[feat_map].set(
-                beta_work, mode="drop")
-
-        m = jax.device_put(jnp.zeros(n, jnp.float32), vsharding)
-        # at beta = 0 the NLL gradient is -0.5 * X^T y, so the sparse
-        # screen pass at zero margins *is* lambda_max — no dense X needed
-        lmax = float(jnp.max(grad_abs(m)))
-    else:
-        X = data
-        if X.shape[0] != n:
-            raise ValueError(f"X rows {X.shape[0]} != len(y) {n}")
-        p = p_work = X.shape[1]
-
-        def grad_abs(m_cur):
-            return nll_grad_abs(X, y, m_cur)
-
-        def make_restricted_solve(lam):
-            def restricted_solve(mask, cap, beta_cur):
-                X_sub, beta_sub, idx = gather_columns(X, beta_cur, mask, cap)
-                res = fit_distributed(X_sub, y, lam, mesh, beta0=beta_sub,
-                                      opts=opts)
-                return res, scatter_columns(res.beta, idx, p_work), res.m
-            return restricted_solve
-
-        m = jnp.zeros(n, jnp.float32)
-        lmax = float(lambda_max(X, y))
-
-    def empty_result(beta_cur):
-        return DistributedFitResult(beta=beta_cur, f=float("nan"), n_iters=0,
-                                    objective_history=[])
-
-    lams = _lambda_grid(lmax, path_len, extra_lams)
-    beta = jnp.zeros(p_work, jnp.float32)
-    lam_prev = lmax
-    carry_mask = None
-    points: List[PathPoint] = []
-    for lam in lams:
-        res, beta, m, info, mask = _screened_point(
-            p_work, lam, lam_prev, beta, m, grad_abs=grad_abs,
-            restricted_solve=make_restricted_solve(lam),
-            empty_result=empty_result, cap_tile=cap_tile,
-            kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
-            prev_mask=carry_mask, violation_budget=violation_budget,
-        )
-        if carry_working_set:
-            carry_mask = mask
-        lam_prev = lam
-        beta_out = to_output(beta) if to_output is not None else beta[:p]
-        nnz = int(jnp.sum(jnp.abs(beta_out) > 0))
-        f = float(res.f) if res.n_iters else float(objective(m, y, beta, lam))
-        metrics = eval_fn(beta_out) if eval_fn else {}
-        points.append(
-            PathPoint(lam=lam, nnz=nnz, f=f, n_iters=res.n_iters,
-                      beta=beta_out, metrics=metrics, screen=info)
-        )
-        if verbose:
-            print(
-                f"lambda={lam:10.4f} nnz={nnz:6d} f={points[-1].f:12.4f} "
-                f"iters={res.n_iters:3d} {info} {metrics}"
-            )
-    return points
+    design = as_design(data, n=int(y.shape[0]), mesh=mesh, tile=opts.tile)
+    return LogisticL1(opts=opts).path(
+        design, y, path_len=path_len, eval_fn=eval_fn,
+        extra_lams=extra_lams, verbose=verbose, screen=True,
+        kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
+        carry_working_set=carry_working_set,
+        violation_budget=violation_budget,
+    )

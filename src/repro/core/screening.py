@@ -143,36 +143,26 @@ def scatter_columns(beta_sub, idx, p: int):
 
 
 @lru_cache(maxsize=None)
-def make_sparse_screen(mesh: Mesh, n_loc: int, tile: int,
-                       model_axis: str = "model"):
-    """Distributed strong-rule gradient pass over by-feature sparse slabs.
-
-    Builds a jitted ``screen(row_idx, values, y, m) -> g_abs`` where
-    ``row_idx``/``values`` are the (p, DP, K) mesh slabs (sharded
-    P(model, data, None), local row indices with sentinel ``n_loc``) and
-    ``y``/``m`` are example-sharded P(data). Inside ``shard_map`` each
-    (model, data) shard walks its feature tiles with a ``lax.scan`` —
-    per-tile memory is (tile, K), never a dense (n, p) block — computing the
-    partial gradients from its local rows; a psum over the data axes yields
-    the exact row-global |g_j|, feature-sharded P(model). The result feeds
-    :func:`strong_rule_mask` and :func:`kkt_violations` unchanged (both are
-    elementwise in g_abs), making the whole screen sparse-native.
-    """
+def _sparse_corr_program(mesh: Mesh, n_loc: int, tile: int,
+                         model_axis: str = "model"):
+    """The shard_map slab-stream behind both the sparse screen and
+    ``Design.correlation``: ``corr(row_idx, values, v) -> X^T v`` (signed),
+    feature-sharded P(model). Un-jitted so callers can fuse it into their
+    own programs; see :func:`make_sparse_corr` for the jitted form."""
     from repro.compat import shard_map
     from repro.core.distributed import _data_axes
 
     daxes = _data_axes(mesh)
     dspec = P(daxes) if daxes else P()
 
-    @jax.jit
     @partial(
         shard_map,
         mesh=mesh,
         in_specs=(P(model_axis, daxes, None), P(model_axis, daxes, None),
-                  dspec, dspec),
+                  dspec),
         out_specs=P(model_axis),
     )
-    def screen(row_idx, values, y, m):
+    def corr(row_idx, values, v):
         from repro.kernels.ops import slab_corr
 
         rows, vals = row_idx[:, 0, :], values[:, 0, :]
@@ -181,7 +171,6 @@ def make_sparse_screen(mesh: Mesh, n_loc: int, tile: int,
             f"per-shard feature count {p_loc} must be a multiple of "
             f"tile={tile} (pad the slabs upstream)"
         )
-        v = _nll_residual(m, y)
 
         def tile_pass(_, i):
             rt = jax.lax.dynamic_slice(rows, (i * tile, 0), (tile, k))
@@ -192,6 +181,39 @@ def make_sparse_screen(mesh: Mesh, n_loc: int, tile: int,
         g = g.reshape(p_loc)
         for ax in daxes:
             g = jax.lax.psum(g, ax)
-        return jnp.abs(g)
+        return g
+
+    return corr
+
+
+@lru_cache(maxsize=None)
+def make_sparse_corr(mesh: Mesh, n_loc: int, tile: int,
+                     model_axis: str = "model"):
+    """Jitted distributed slab correlation ``corr(row_idx, values, v) ->
+    X^T v`` over (p, DP, K) mesh slabs (sharded P(model, data, None), local
+    row indices with sentinel ``n_loc``); ``v`` is example-sharded P(data).
+    Per-tile memory is (tile, K) — never a dense (n, p) block. This is the
+    one gradient-pass primitive: the strong-rule screen is ``|corr(...)|``
+    at the NLL residual and lambda_max is ``max |corr(0.5 y)|``
+    (``repro.api.lambda_max_design``)."""
+    return jax.jit(_sparse_corr_program(mesh, n_loc, tile, model_axis))
+
+
+@lru_cache(maxsize=None)
+def make_sparse_screen(mesh: Mesh, n_loc: int, tile: int,
+                       model_axis: str = "model"):
+    """Distributed strong-rule gradient pass over by-feature sparse slabs.
+
+    Builds a jitted ``screen(row_idx, values, y, m) -> g_abs``: the
+    :func:`make_sparse_corr` slab stream evaluated at the per-example NLL
+    residual, absolute value taken. The result feeds
+    :func:`strong_rule_mask` and :func:`kkt_violations` unchanged (both are
+    elementwise in g_abs), making the whole screen sparse-native.
+    """
+    corr = _sparse_corr_program(mesh, n_loc, tile, model_axis)
+
+    @jax.jit
+    def screen(row_idx, values, y, m):
+        return jnp.abs(corr(row_idx, values, _nll_residual(m, y)))
 
     return screen

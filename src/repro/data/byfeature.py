@@ -306,24 +306,18 @@ def gather_features(row_idx, values, beta, mask, cap: int, *, sentinel: int,
     return row_idx_sub, values_sub, beta_sub, idx
 
 
-def gather_features_buckets(slabs: "SlabBuckets", beta, mask, cap: int,
-                            k_cap: int):
-    """:func:`gather_features` over an nnz-bucketed layout.
+def take_features_buckets(slabs: "SlabBuckets", idx, k_cap: int):
+    """Explicit-index feature take over an nnz-bucketed layout.
 
-    ``mask``/``beta`` live on the concatenated (bucket-permuted, padded)
-    feature axis. Each bucket is gathered with the global packed indices
-    remapped into its own range (out-of-range -> all-sentinel fill) and
-    trimmed/padded to ``k_cap``; since every index lands in exactly one
-    bucket, a where-combine assembles the single restricted (cap, DP,
-    k_cap) slab pair the solver consumes.
+    ``idx`` holds concatenated-bucket-axis positions (sentinel >= the
+    concatenated extent marks padding). Each bucket is taken with the
+    indices remapped into its own range (out-of-range -> all-sentinel
+    fill) and trimmed/padded to ``k_cap``; since every index lands in
+    exactly one bucket, a where-combine assembles a single
+    (len(idx), DP, k_cap) slab pair.
     """
-    from repro.core.screening import pack_indices
-
-    p_work = mask.shape[0]
-    idx = pack_indices(mask, cap)
-    beta_sub = jnp.take(beta, idx, mode="fill", fill_value=0.0)
     n_loc = slabs.n_loc
-    rows_sub = None
+    rows_sub = vals_sub = None
     off = 0
     for r_b, v_b, _ in slabs.buckets:
         p_b = r_b.shape[0]
@@ -340,6 +334,23 @@ def gather_features_buckets(slabs: "SlabBuckets", beta, mask, cap: int,
             rows_sub = jnp.where(sel, rb, rows_sub)
             vals_sub = jnp.where(sel, vb, vals_sub)
         off += p_b
+    return rows_sub, vals_sub
+
+
+def gather_features_buckets(slabs: "SlabBuckets", beta, mask, cap: int,
+                            k_cap: int):
+    """:func:`gather_features` over an nnz-bucketed layout.
+
+    ``mask``/``beta`` live on the concatenated (bucket-permuted, padded)
+    feature axis. The packed working-set indices are taken bucket-by-bucket
+    (:func:`take_features_buckets`) into the single restricted (cap, DP,
+    k_cap) slab pair the solver consumes.
+    """
+    from repro.core.screening import pack_indices
+
+    idx = pack_indices(mask, cap)
+    beta_sub = jnp.take(beta, idx, mode="fill", fill_value=0.0)
+    rows_sub, vals_sub = take_features_buckets(slabs, idx, k_cap)
     return rows_sub, vals_sub, beta_sub, idx
 
 

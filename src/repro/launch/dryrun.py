@@ -238,11 +238,13 @@ def lower_glm(name: str, mesh, mesh_name: str, verbose: bool = True) -> dict:
     iteration (subproblem + AllReduce + line search) at Table-2 scale.
 
     epsilon/dna lower densely; glm-webspam (dense X would be 10.5 TB) uses
-    the by-feature sparse step (paper Table-1 layout, DESIGN §2.3).
+    the by-feature sparse step (paper Table-1 layout, DESIGN §2.3). The
+    step programs come from the ``repro.api`` strategy resolver
+    (``mesh_programs``) — the same resolution live solves get.
     """
+    from repro.api import mesh_programs
     from repro.configs.glm import GLM_CONFIGS
     from repro.core.dglmnet import DGLMNETOptions
-    from repro.core.distributed import make_dglmnet_step
     from repro.launch.roofline import analyze
 
     cfg = GLM_CONFIGS[name]
@@ -260,17 +262,15 @@ def lower_glm(name: str, mesh, mesh_name: str, verbose: bool = True) -> dict:
         # by-feature sparse layout (paper Table 1): dense X would be 10.5 TB.
         # K = padded nnz per feature per data shard (avg 72/16 -> 64 covers
         # the tail with the sentinel mechanism).
-        from repro.core.distributed import make_dglmnet_step_sparse
-
         k_pad = 64
-        step = make_dglmnet_step_sparse(mesh, opts)
+        step, _ = mesh_programs(mesh, opts, layout="slab")
         lowered = jax.jit(step).lower(
             sds((p, ddim, k_pad), jnp.int32), sds((p, ddim, k_pad), jnp.float32),
             sds((n,), jnp.float32), sds((p,), jnp.float32),
             sds((n,), jnp.float32), sds((), jnp.float32),
         )
     else:
-        step = make_dglmnet_step(mesh, opts)
+        step, _ = mesh_programs(mesh, opts, layout="dense")
         lowered = jax.jit(step).lower(
             sds((n, p), jnp.float32), sds((n,), jnp.float32),
             sds((p,), jnp.float32), sds((n,), jnp.float32),
@@ -314,15 +314,13 @@ def lower_glm_screened(mesh, mesh_name: str, verbose: bool = True) -> list:
 
     No ``.compile()`` and no execution — ``.lower()`` alone certifies the
     shard_map programs partition at mesh scale; compile cost for the full
-    p=16.6M scan is the production TPU's business, not CI's.
+    p=16.6M scan is the production TPU's business, not CI's. All programs
+    come from ``repro.api.mesh_programs`` — the strategy resolver the live
+    solves use.
     """
+    from repro.api import mesh_programs
     from repro.configs.glm import GLM_CONFIGS
     from repro.core.dglmnet import DGLMNETOptions
-    from repro.core.distributed import (
-        make_dglmnet_step,
-        make_dglmnet_step_sparse,
-    )
-    from repro.core.screening import make_sparse_screen
 
     mdim = mesh.shape["model"]
     ddim = num_chips(mesh) // mdim
@@ -351,10 +349,10 @@ def lower_glm_screened(mesh, mesh_name: str, verbose: bool = True) -> list:
     slab_i = sds((p, ddim, k_pad), jnp.int32)
     slab_f = sds((p, ddim, k_pad), jnp.float32)
     vec_n = sds((n,), jnp.float32)
+    step_sparse, screen = mesh_programs(mesh, opts, layout="slab",
+                                        n_loc=n_loc)
     record("glm-webspam-screen",
-           lambda: make_sparse_screen(mesh, n_loc, tile).lower(
-               slab_i, slab_f, vec_n, vec_n))
-    step_sparse = make_dglmnet_step_sparse(mesh, opts)
+           lambda: screen.lower(slab_i, slab_f, vec_n, vec_n))
     record("glm-webspam-blocked-step",
            lambda: jax.jit(step_sparse).lower(
                slab_i, slab_f, vec_n, sds((p,), jnp.float32), vec_n,
@@ -364,9 +362,9 @@ def lower_glm_screened(mesh, mesh_name: str, verbose: bool = True) -> list:
     cfg = GLM_CONFIGS["glm-epsilon"]
     n = cfg.num_examples - cfg.num_examples % ddim
     p = ((cfg.num_features + mdim * tile - 1) // (mdim * tile)) * (mdim * tile)
-    step_dense = make_dglmnet_step(
+    step_dense, _ = mesh_programs(
         mesh, DGLMNETOptions(tile=tile, cycle_mode="blocked", block=16,
-                             use_kernel=True))
+                             use_kernel=True), layout="dense")
     record("glm-epsilon-blocked-kernel-step",
            lambda: jax.jit(step_dense).lower(
                sds((n, p), jnp.float32), sds((n,), jnp.float32),

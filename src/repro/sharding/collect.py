@@ -1,0 +1,46 @@
+"""Mesh collection helpers shared by the solver drivers.
+
+``jnp.concatenate`` of P(model)-sharded pieces of different lengths
+miscompiles on the JAX pinned in this environment (the partitioner emits a
+wrong-extent dynamic-update window, observed as garbage tails in the
+concatenated screen output — first hit by the per-bucket screened path in
+PR 3). The guard is simple: reshard every piece to replicated *before* the
+concatenate. The pieces this repo concatenates are O(p) feature-axis
+vectors the drivers' elementwise mask math wants replicated anyway, so the
+reshard costs one allgather that the subsequent host sync would have paid
+regardless.
+
+This module is the single home of that workaround; call sites must not
+inline their own ``device_put``-then-concat dance (a second inline copy is
+how the bug comes back when one site gets fixed and the other doesn't).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def replicate(x, mesh: Mesh):
+    """Reshard ``x`` to fully replicated on ``mesh`` (P() over all axes).
+
+    The building block for feature-axis collection and for handing sharded
+    vectors to host-side consumers (metrics, numpy) without relying on
+    ``device_get`` semantics for partially-addressable layouts.
+    """
+    return jax.device_put(x, NamedSharding(mesh, P()))
+
+
+def concat_replicated(pieces: Sequence, mesh: Mesh, axis: int = 0):
+    """Concatenate mesh arrays along ``axis`` via the replicate-first guard.
+
+    Use this instead of ``jnp.concatenate`` whenever any piece may carry a
+    P(model) (or otherwise sharded) layout — concatenating sharded pieces
+    of unequal length miscompiles on current JAX (see module docstring).
+    """
+    pieces = [replicate(piece, mesh) for piece in pieces]
+    if len(pieces) == 1:
+        return pieces[0]
+    return jnp.concatenate(pieces, axis=axis)

@@ -36,15 +36,23 @@ def log_loss(scores, labels) -> float:
     return float(jnp.mean(jnp.logaddexp(0.0, -y * m)))
 
 
+def metrics_from_scores(scores, labels) -> dict:
+    """The paper's Figure-1 metric set from precomputed scores — shared by
+    the host-matrix ``glm_eval_fn`` and the design-streaming
+    ``repro.api.make_design_eval`` (which computes the scores on the mesh
+    and ships only the (n_test,) vector to host)."""
+    return {
+        "auprc": auprc(scores, labels),
+        "accuracy": accuracy(scores, labels),
+        "logloss": log_loss(scores, labels),
+    }
+
+
 def glm_eval_fn(X_test, y_test):
-    """eval_fn for regularization_path: test AUPRC + accuracy."""
+    """eval_fn for the regularization path: test AUPRC + accuracy from a
+    host-resident test matrix."""
 
     def fn(beta):
-        scores = X_test @ beta
-        return {
-            "auprc": auprc(scores, y_test),
-            "accuracy": accuracy(scores, y_test),
-            "logloss": log_loss(scores, y_test),
-        }
+        return metrics_from_scores(X_test @ beta, y_test)
 
     return fn

@@ -1,0 +1,289 @@
+"""repro.api front door: Design protocol equivalence across layouts,
+shim-vs-estimator bit-identity for the legacy entry points (local flavors;
+mesh flavors in test_api_mesh.py), strategy/options validation, and the
+one-lambda_max satellite."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    BucketedSlabDesign,
+    DenseDesign,
+    Design,
+    LogisticL1,
+    ShardedDesign,
+    SlabDesign,
+    as_design,
+    lambda_max_design,
+    make_design_eval,
+    resolve,
+)
+from repro.configs.base import GLMConfig
+from repro.core import DGLMNETOptions, fit, lambda_max, regularization_path
+from repro.data.byfeature import SlabBuckets, to_by_feature, to_slab_buckets
+from repro.data.synthetic import make_glm_dataset
+
+
+@pytest.fixture(scope="module")
+def api_glm():
+    cfg = GLMConfig(name="api", num_examples=640, num_features=96,
+                    density=0.25)
+    return make_glm_dataset(cfg, jax.random.key(5))
+
+
+def _designs(X):
+    """One design per layout over the same matrix."""
+    bf = to_by_feature(X)
+    return {
+        "dense": DenseDesign(X),
+        "slab": SlabDesign.from_by_feature(bf),
+        "slab-dp2": SlabDesign.from_by_feature(bf, dp=2),
+        "bucketed": BucketedSlabDesign.from_by_feature(bf, dp=2),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Design protocol equivalence across layouts
+# ---------------------------------------------------------------------------
+
+def test_designs_satisfy_protocol(api_glm):
+    for name, d in _designs(api_glm.X_train).items():
+        assert isinstance(d, Design), name
+        assert d.shape == tuple(api_glm.X_train.shape), name
+
+
+def test_correlation_matches_dense_across_layouts(api_glm):
+    X = api_glm.X_train
+    v = jax.random.normal(jax.random.key(1), (X.shape[0],))
+    ref = np.asarray(X.T @ v)
+    for name, d in _designs(X).items():
+        got = np.asarray(d.correlation(v))
+        np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-3,
+                                   err_msg=name)
+
+
+def test_margins_matches_dense_across_layouts(api_glm):
+    X = api_glm.X_train
+    beta = jax.random.normal(jax.random.key(2), (X.shape[1],)) * 0.1
+    ref = np.asarray(X @ beta)
+    for name, d in _designs(X).items():
+        np.testing.assert_allclose(np.asarray(d.margins(beta)), ref,
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+def test_gram_tile_matches_dense_across_layouts(api_glm):
+    X = api_glm.X_train
+    n = X.shape[0]
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.key(3), (n,))) * 0.25
+    r = jax.random.normal(jax.random.key(4), (n,))
+    G_ref, c_ref = _designs(X)["dense"].gram_tile(w, r, 32, 16)
+    for name, d in _designs(X).items():
+        G, c = d.gram_tile(w, r, 32, 16)
+        np.testing.assert_allclose(np.asarray(G), np.asarray(G_ref),
+                                   rtol=1e-4, atol=1e-3, err_msg=name)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref),
+                                   rtol=1e-4, atol=1e-3, err_msg=name)
+
+
+def test_gather_scatter_roundtrip_across_layouts(api_glm):
+    X = api_glm.X_train
+    p = X.shape[1]
+    beta = jax.random.normal(jax.random.key(6), (p,))
+    mask = jnp.arange(p) % 3 == 0
+    for name, d in _designs(X).items():
+        sub, beta_sub, idx = d.gather(beta, mask, 64)
+        assert sub.shape[1] == 64, name
+        # restricted margins == masked full margins (padding is inert)
+        m_sub = np.asarray(sub.margins(beta_sub))
+        m_ref = np.asarray(X @ jnp.where(mask, beta, 0.0))
+        np.testing.assert_allclose(m_sub, m_ref, rtol=1e-4, atol=1e-4,
+                                   err_msg=name)
+        # scatter restores exactly the masked coefficients, original order
+        back = np.asarray(d.scatter(beta_sub, idx))
+        np.testing.assert_allclose(
+            back, np.asarray(jnp.where(mask, beta, 0.0)), rtol=1e-6,
+            atol=1e-7, err_msg=name)
+
+
+def test_as_design_coercions(api_glm):
+    X = api_glm.X_train
+    bf = to_by_feature(X)
+    assert as_design(X).layout == "dense"
+    assert as_design(bf).layout == "slab"
+    assert as_design(to_slab_buckets(bf, 2)).layout == "bucketed"
+    d = as_design((bf.row_idx[:, None, :], bf.values[:, None, :]),
+                  n=X.shape[0])
+    assert d.layout == "slab" and d.front_packed
+    # sentinels not front-packed (here: K axis reversed) are detected and
+    # disable the positional K trim
+    ri = np.asarray(bf.row_idx)[:, ::-1]
+    vv = np.asarray(bf.values)[:, ::-1]
+    d2 = as_design((jnp.asarray(ri)[:, None, :], jnp.asarray(vv)[:, None, :]),
+                   n=X.shape[0])
+    assert not d2.front_packed
+    with pytest.raises(TypeError):
+        as_design({"not": "a design"})
+    with pytest.raises(ValueError):
+        as_design((bf.row_idx, bf.values))      # slabs need n=
+
+
+# ---------------------------------------------------------------------------
+# satellite: one lambda_max, Design.correlation-based
+# ---------------------------------------------------------------------------
+
+def test_lambda_max_dense_equals_slab(api_glm):
+    X, y = api_glm.X_train, api_glm.y_train
+    ref = float(lambda_max(X, y))
+    for name, d in _designs(X).items():
+        got = float(lambda_max_design(d, y))
+        assert got == pytest.approx(ref, rel=1e-5), name
+    # the dense entry point and the design helper are bit-identical
+    assert float(lambda_max_design(DenseDesign(X), y)) == ref
+
+
+# ---------------------------------------------------------------------------
+# shim-vs-front-door bit-identity (local entry points)
+# ---------------------------------------------------------------------------
+
+def test_fit_shim_bit_identical(api_glm):
+    X, y = api_glm.X_train, api_glm.y_train
+    lam = float(lambda_max(X, y)) / 16
+    opts = DGLMNETOptions(num_blocks=4, tile=16, max_iters=30)
+    legacy = fit(X, y, lam, opts=opts)
+    front = LogisticL1(opts=opts).fit(DenseDesign(X), y, lam)
+    assert bool(jnp.all(legacy.beta == front.beta))
+    assert legacy.f == front.f
+    assert legacy.n_iters == front.n_iters
+    assert legacy.alpha_history == front.alpha_history
+    assert legacy.objective_history == front.objective_history
+    assert legacy.unit_step_frac == front.unit_step_frac
+    assert legacy.converged == front.converged
+
+
+def test_regularization_path_shim_bit_identical(api_glm):
+    X, y = api_glm.X_train, api_glm.y_train
+    opts = DGLMNETOptions(num_blocks=4, tile=16, max_iters=40)
+    legacy = regularization_path(X, y, path_len=5, opts=opts)
+    front = LogisticL1(opts=opts).path(DenseDesign(X), y, path_len=5)
+    assert len(legacy) == len(front) == 5
+    for a, b in zip(legacy, front):
+        assert a.lam == b.lam and a.f == b.f and a.nnz == b.nnz
+        assert a.n_iters == b.n_iters and a.screen == b.screen
+        assert bool(jnp.all(a.beta == b.beta))
+
+
+def test_local_slab_path_matches_dense(api_glm):
+    """The front door's local slab/bucketed paths land on the dense path's
+    solutions — a capability no legacy entry point had."""
+    X, y = api_glm.X_train, api_glm.y_train
+    opts = DGLMNETOptions(num_blocks=4, tile=16, max_iters=60, rel_tol=1e-7)
+    ref = LogisticL1(opts=opts).path(DenseDesign(X), y, path_len=4)
+    for name in ("slab", "bucketed"):
+        pts = LogisticL1(opts=opts).path(_designs(X)[name], y, path_len=4)
+        for pr, pb in zip(ref, pts):
+            rel = abs(pb.f - pr.f) / max(abs(pr.f), 1e-9)
+            assert rel < 1e-4, (name, pb.lam, pb.f, pr.f)
+            np.testing.assert_allclose(np.asarray(pb.beta),
+                                       np.asarray(pr.beta),
+                                       rtol=1e-2, atol=1e-3)
+
+
+def test_warm_start_estimator(api_glm):
+    X, y = api_glm.X_train, api_glm.y_train
+    lam = float(lambda_max(X, y)) / 8
+    opts = DGLMNETOptions(num_blocks=4, tile=16, max_iters=60)
+    est = LogisticL1(opts=opts, warm_start=True)
+    est.fit(DenseDesign(X), y, lam)
+    cold_iters = est.fit(DenseDesign(X), y, lam / 2, beta0=jnp.zeros(
+        X.shape[1], jnp.float32)).n_iters
+    est.fit(DenseDesign(X), y, lam)
+    warm_iters = est.fit(DenseDesign(X), y, lam / 2).n_iters
+    assert warm_iters <= cold_iters
+
+
+def test_streamed_eval_matches_host_eval(api_glm):
+    from repro.train.metrics import glm_eval_fn
+
+    X, y = api_glm.X_train, api_glm.y_train
+    Xt, yt = api_glm.X_test, api_glm.y_test
+    beta = jax.random.normal(jax.random.key(9), (X.shape[1],)) * 0.1
+    host = glm_eval_fn(Xt, yt)(beta)
+    streamed = make_design_eval(SlabDesign.from_dense(Xt), yt)(beta)
+    assert set(host) == set(streamed)
+    for k in host:
+        assert host[k] == pytest.approx(streamed[k], rel=1e-4, abs=1e-5), k
+
+
+# ---------------------------------------------------------------------------
+# satellite: early validation
+# ---------------------------------------------------------------------------
+
+def test_options_validation_messages():
+    with pytest.raises(ValueError, match="unknown cycle_mode"):
+        DGLMNETOptions(cycle_mode="bogus")
+    with pytest.raises(ValueError, match="power of two"):
+        DGLMNETOptions(block=12)
+    with pytest.raises(ValueError, match="unknown method"):
+        DGLMNETOptions(method="nope")
+    with pytest.raises(ValueError, match="tile must be"):
+        DGLMNETOptions(tile=0)
+    with pytest.raises(ValueError, match="max_iters"):
+        DGLMNETOptions(max_iters=0)
+
+
+def test_resolver_validation_and_auto_cycle(api_glm):
+    X = api_glm.X_train
+    with pytest.raises(ValueError, match="divide tile"):
+        resolve(DenseDesign(X),
+                DGLMNETOptions(cycle_mode="blocked", tile=40, block=16))
+    # auto resolves to a concrete mode via the tile-size heuristic
+    strat = resolve(DenseDesign(X),
+                    DGLMNETOptions(cycle_mode="auto", tile=128, block=16))
+    assert strat.opts.cycle_mode == "blocked"
+    strat = resolve(DenseDesign(X),
+                    DGLMNETOptions(cycle_mode="auto", tile=16, block=16))
+    assert strat.opts.cycle_mode == "sequential"
+    assert strat.execution == "local" and strat.solver == "dense"
+
+
+def test_sharded_design_requires_model_axis(api_glm):
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="'model' axis"):
+        ShardedDesign(DenseDesign(api_glm.X_train), mesh)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: layout equivalence over random sparse matrices
+# ---------------------------------------------------------------------------
+
+def test_layout_equivalence_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([0.05, 0.3, 0.9]),
+           st.sampled_from([1, 2, 4]))
+    def run(seed, density, dp):
+        rng = np.random.default_rng(seed)
+        n, p = 32 * dp, 24
+        X = rng.standard_normal((n, p)).astype(np.float32)
+        X *= rng.random((n, p)) < density
+        X = jnp.asarray(X)
+        v = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        beta = jnp.asarray(rng.standard_normal(p).astype(np.float32))
+        ref_c = np.asarray(X.T @ v)
+        ref_m = np.asarray(X @ beta)
+        bf = to_by_feature(X)
+        for d in (SlabDesign.from_by_feature(bf, dp),
+                  BucketedSlabDesign.from_by_feature(bf, dp)):
+            np.testing.assert_allclose(np.asarray(d.correlation(v)), ref_c,
+                                       rtol=1e-3, atol=1e-3)
+            np.testing.assert_allclose(np.asarray(d.margins(beta)), ref_m,
+                                       rtol=1e-3, atol=1e-3)
+            np.testing.assert_allclose(np.asarray(d.densify()),
+                                       np.asarray(X), atol=1e-6)
+
+    run()

@@ -1,0 +1,276 @@
+"""Mesh flavors of the front-door equivalence suite (subprocesses with
+fake CPU devices — tests themselves must see 1 device, per the dry-run
+isolation rule): every legacy mesh entry point must be bit-identical to
+``LogisticL1`` over the matching ``ShardedDesign``, the streamed eval must
+match the host-matrix eval, and the shared reshard-to-replicated concat
+guard must keep working."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+
+
+def test_fit_distributed_shims_bit_identical_1x2():
+    """fit_distributed and fit_distributed_sparse (slab + densify override)
+    vs the front door on a 1x2 mesh: bit-identical betas and telemetry."""
+    r = _run("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.api import (DenseDesign, LogisticL1, ShardedDesign,
+                               SlabDesign)
+        from repro.configs.base import GLMConfig
+        from repro.core import (DGLMNETOptions, fit_distributed,
+                                fit_distributed_sparse, lambda_max)
+        from repro.data.byfeature import to_by_feature, to_slabs
+        from repro.data.synthetic import make_glm_dataset
+        from repro.launch.mesh import make_dev_mesh
+
+        cfg = GLMConfig(name='e', num_examples=512, num_features=64,
+                        density=0.2)
+        ds = make_glm_dataset(cfg, jax.random.key(2))
+        X, y = ds.X_train, ds.y_train
+        lam = float(lambda_max(X, y)) / 16
+        opts = DGLMNETOptions(num_blocks=2, tile=16, max_iters=25)
+        mesh = make_dev_mesh(1, 2)
+
+        def same(a, b):
+            assert a.f == b.f and a.n_iters == b.n_iters, (a.f, b.f)
+            assert bool(jnp.all(a.beta == b.beta))
+            assert a.alpha_history == b.alpha_history
+            assert a.unit_step_frac == b.unit_step_frac
+            assert a.converged == b.converged
+
+        legacy = fit_distributed(X, y, lam, mesh, opts=opts)
+        front = LogisticL1(opts=opts).fit(
+            ShardedDesign(DenseDesign(X), mesh, tile=opts.tile), y, lam)
+        same(legacy, front)
+
+        row_idx, values, _ = to_slabs(to_by_feature(X), 1)
+        for densify in (None, False, True):
+            legacy = fit_distributed_sparse(row_idx, values, y, lam, mesh,
+                                            opts=opts, densify=densify)
+            front = LogisticL1(opts=opts).fit(
+                ShardedDesign(SlabDesign(row_idx, values, int(y.shape[0])),
+                              mesh, tile=opts.tile),
+                y, lam, densify=densify)
+            same(legacy, front)
+        print('OK fit shims 1x2')
+    """, devices=2)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+def test_regpath_distributed_shim_bit_identical_layouts():
+    """regularization_path_distributed vs LogisticL1.path on a 2x4 mesh,
+    for all three mesh layouts (dense X, flat slabs, SlabBuckets):
+    bit-identical betas and identical screen telemetry per lambda."""
+    r = _run("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.api import (BucketedSlabDesign, DenseDesign, LogisticL1,
+                               ShardedDesign, SlabDesign, as_design)
+        from repro.configs.base import GLMConfig
+        from repro.core import DGLMNETOptions, regularization_path_distributed
+        from repro.data.byfeature import (to_by_feature, to_slab_buckets,
+                                          to_slabs)
+        from repro.data.synthetic import make_glm_dataset
+        from repro.launch.mesh import make_dev_mesh
+
+        cfg = GLMConfig(name='e', num_examples=512, num_features=96,
+                        density=0.15)
+        ds = make_glm_dataset(cfg, jax.random.key(4))
+        X, y = ds.X_train, ds.y_train
+        n = (X.shape[0] // 2) * 2
+        X, y = X[:n], y[:n]
+        opts = DGLMNETOptions(num_blocks=2, tile=16, max_iters=30)
+        mesh = make_dev_mesh(2, 4)
+        bf = to_by_feature(X)
+        row_idx, values, _ = to_slabs(bf, 2)
+        layouts = {
+            'dense': X,
+            'slab': (row_idx, values),
+            'bucketed': to_slab_buckets(bf, 2),
+        }
+        for name, data in layouts.items():
+            legacy = regularization_path_distributed(
+                data, y, mesh, path_len=4, opts=opts)
+            design = as_design(data, n=n, mesh=mesh, tile=opts.tile)
+            front = LogisticL1(opts=opts).path(design, y, path_len=4)
+            for a, b in zip(legacy, front):
+                assert a.lam == b.lam and a.f == b.f, (name, a.lam)
+                assert a.nnz == b.nnz and a.n_iters == b.n_iters, name
+                assert a.screen == b.screen, (name, a.screen, b.screen)
+                assert bool(jnp.all(a.beta == b.beta)), name
+        print('OK path shims all layouts')
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+def test_streamed_eval_matches_host_eval_on_mesh():
+    """LogisticL1.path(ShardedDesign, eval_fn=make_design_eval(...)):
+    per-lambda AUPRC/accuracy streamed through a *sharded* test design
+    match glm_eval_fn on the replicated host matrix — the ROADMAP
+    streamed-eval item."""
+    r = _run("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.api import (LogisticL1, ShardedDesign, SlabDesign,
+                               make_design_eval)
+        from repro.configs.base import GLMConfig
+        from repro.core import DGLMNETOptions
+        from repro.data.synthetic import make_glm_dataset
+        from repro.launch.mesh import make_dev_mesh
+        from repro.train.metrics import glm_eval_fn
+
+        cfg = GLMConfig(name='se', num_examples=640, num_features=64,
+                        density=0.2)
+        ds = make_glm_dataset(cfg, jax.random.key(6))
+        X, y = ds.X_train, ds.y_train
+        n = (X.shape[0] // 2) * 2
+        X, y = X[:n], y[:n]
+        nt = (ds.X_test.shape[0] // 2) * 2
+        Xt, yt = ds.X_test[:nt], ds.y_test[:nt]
+        mesh = make_dev_mesh(2, 4)
+        opts = DGLMNETOptions(num_blocks=2, tile=16, max_iters=30)
+
+        design = ShardedDesign(SlabDesign.from_dense(X, 2), mesh, tile=16)
+        streamed = make_design_eval(SlabDesign.from_dense(Xt, 2), yt,
+                                    mesh=mesh, tile=16)
+        pts = LogisticL1(opts=opts).path(design, y, path_len=4,
+                                         eval_fn=streamed)
+        host_eval = glm_eval_fn(Xt, yt)
+        for pt in pts:
+            ref = host_eval(pt.beta)
+            for k in ref:
+                assert abs(pt.metrics[k] - ref[k]) < 1e-4, (k, pt.metrics,
+                                                            ref)
+        assert any(pt.metrics['auprc'] > 0.5 for pt in pts)
+        print('OK streamed eval')
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+def test_path_with_mismatched_design_tile():
+    """Regression: LogisticL1.opts.tile != ShardedDesign.tile must not
+    split the work axis between two mesh states (g_abs/mask shape
+    mismatch, or silent misalignment across buckets) — the estimator
+    threads opts.tile through every work-axis helper."""
+    r = _run("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.api import LogisticL1, ShardedDesign, SlabDesign
+        from repro.configs.base import GLMConfig
+        from repro.core import DGLMNETOptions
+        from repro.data.synthetic import make_glm_dataset
+        from repro.launch.mesh import make_dev_mesh
+
+        cfg = GLMConfig(name='tm', num_examples=256, num_features=40,
+                        density=0.2)
+        ds = make_glm_dataset(cfg, jax.random.key(3))
+        X, y = ds.X_train, ds.y_train
+        n = (X.shape[0] // 2) * 2
+        X, y = X[:n], y[:n]
+        mesh = make_dev_mesh(2, 2)
+        opts = DGLMNETOptions(num_blocks=2, tile=4, max_iters=20)
+        design16 = ShardedDesign(SlabDesign.from_dense(X, 2), mesh, tile=16)
+        design4 = ShardedDesign(SlabDesign.from_dense(X, 2), mesh, tile=4)
+        pts = LogisticL1(opts=opts).path(design16, y, path_len=3)
+        ref = LogisticL1(opts=opts).path(design4, y, path_len=3)
+        for a, b in zip(pts, ref):
+            assert a.f == b.f and a.nnz == b.nnz, (a.lam, a.f, b.f)
+            assert bool(jnp.all(a.beta == b.beta))
+        print('OK mismatched tile')
+    """, devices=4)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+def test_concat_replicated_guard():
+    """Regression for the P(model)-sharded concat miscompile: the shared
+    sharding/collect helper must equal the host-side concat for unequal-
+    length feature-sharded pieces (the inline workaround this replaces was
+    in regpath.py)."""
+    r = _run("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_dev_mesh
+        from repro.sharding.collect import concat_replicated, replicate
+
+        mesh = make_dev_mesh(2, 4)
+        bshard = NamedSharding(mesh, P('model'))
+        pieces_host = [np.arange(s, dtype=np.float32) + 100 * i
+                       for i, s in enumerate((64, 128, 32))]
+        pieces = [jax.device_put(jnp.asarray(x), bshard)
+                  for x in pieces_host[:2]]
+        pieces.append(jax.device_put(jnp.asarray(pieces_host[2]),
+                                     NamedSharding(mesh, P())))
+        out = concat_replicated(pieces, mesh)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.concatenate(pieces_host))
+        # single piece: passthrough (replicated)
+        one = concat_replicated([pieces[0]], mesh)
+        np.testing.assert_array_equal(np.asarray(one), pieces_host[0])
+        r = replicate(pieces[1], mesh)
+        assert r.sharding.is_fully_replicated
+        print('OK concat guard')
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_bucketed_fit_on_mesh_matches_local():
+    """LogisticL1.fit on a ShardedDesign(BucketedSlabDesign) — a combo no
+    legacy entry point offered — lands on the local dense solve."""
+    r = _run("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.api import BucketedSlabDesign, DenseDesign, LogisticL1, \\
+            ShardedDesign
+        from repro.configs.base import GLMConfig
+        from repro.core import DGLMNETOptions, lambda_max
+        from repro.data.byfeature import to_by_feature
+        from repro.data.synthetic import make_glm_dataset
+        from repro.launch.mesh import make_dev_mesh
+
+        cfg = GLMConfig(name='bk', num_examples=512, num_features=96,
+                        density=0.08)
+        ds = make_glm_dataset(cfg, jax.random.key(8))
+        X, y = ds.X_train, ds.y_train
+        n = (X.shape[0] // 2) * 2
+        X, y = X[:n], y[:n]
+        lam = float(lambda_max(X, y)) / 16
+        opts = DGLMNETOptions(num_blocks=2, tile=16, max_iters=40)
+        mesh = make_dev_mesh(2, 4)
+        inner = BucketedSlabDesign.from_by_feature(to_by_feature(X), dp=2)
+        assert len(inner.slabs.buckets) >= 2
+        res = LogisticL1(opts=opts).fit(
+            ShardedDesign(inner, mesh, tile=16), y, lam)
+        ref = LogisticL1(opts=opts).fit(DenseDesign(X), y, lam)
+        assert abs(res.f - ref.f) / abs(ref.f) < 1e-4, (res.f, ref.f)
+        # the bucket permutation changes the feature-block partition, so
+        # individual near-zero coefficients can drift ~1e-3 while the
+        # objective agrees to 1e-4
+        np.testing.assert_allclose(np.asarray(res.beta), np.asarray(ref.beta),
+                                   rtol=1e-2, atol=3e-3)
+        print('OK bucketed mesh fit')
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
