@@ -21,6 +21,10 @@ Gated metrics (each applied only when present in *both* reports):
   (``max_rel_f_gap``, an absolute gate), and the blocked warm path gets
   a wide catastrophic-only ratio gate (2x the normal one — it rides a
   ~1s tiny measurement and would flap at the standard ratio).
+* ``serve.batch.*.scores_per_s`` — online path-serving throughput
+  (``repro.serve``) per batch size; catastrophic-only floor (same 2x
+  widening) so a batched dispatch degenerating into per-request work
+  fails while host-side packing jitter does not.
 
 All time gates are ratios so the baseline only needs regenerating when
 shapes change:
@@ -102,7 +106,7 @@ def main() -> int:
     # a section present in the baseline but absent from the fresh report
     # means the bench stopped measuring it — that must fail, not silently
     # skip the gate (e.g. someone dropping --kernels from the CI lane)
-    for name in ("distributed", "kernels", "cycle"):
+    for name in ("distributed", "kernels", "cycle", "serve"):
         if name in base and name not in fresh:
             print(f"FAIL: baseline has a '{name}' section but the fresh "
                   f"report does not — was the bench flag dropped?")
@@ -177,6 +181,32 @@ def main() -> int:
             if gap > 1e-3:
                 print(f"FAIL: blocked path objective diverged from the "
                       f"sequential path (max rel gap {gap:.2e} > 1e-3)")
+                ok = False
+
+    if "serve" in fresh and "serve" in base:
+        for bs, row in sorted(base["serve"]["batch"].items()):
+            fresh_row = fresh["serve"]["batch"].get(bs)
+            if fresh_row is None:
+                print(f"FAIL: serve batch size {bs} missing from fresh "
+                      f"report")
+                ok = False
+                continue
+            # throughput rides host-side packing + sub-second timed loops,
+            # so it gets only a catastrophic floor (2x the normal ratio,
+            # like the blocked warm path): what must not slip through is
+            # the batched dispatch degenerating into per-request work.
+            # --normalize multiplies the rate by the same run's seed-style
+            # warm_s (slower machine -> lower rate AND higher warm_s, so
+            # machine speed cancels).
+            f_rate = fresh_row["scores_per_s"] * norm(fresh)
+            b_rate = row["scores_per_s"] * norm(base)
+            floor = b_rate / (2 * args.max_ratio)
+            print(f"serve batch {bs}: fresh {f_rate:,.0f} vs baseline "
+                  f"{b_rate:,.0f} scores/sec (floor {floor:,.0f})")
+            if f_rate < floor:
+                print(f"FAIL: serving throughput at batch {bs} collapsed "
+                      f"({f_rate:,.0f} < {floor:,.0f} scores/sec) — is the "
+                      f"batched dispatch per-request again?")
                 ok = False
 
     if not ok:

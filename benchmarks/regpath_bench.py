@@ -21,11 +21,13 @@ whole path (screen included) never materializes a dense X. ``--cycle``
 adds the blocked-vs-sequential CD cycle section: a per-tile microbench of
 the semi-parallel cycle against the F-step chain plus the engine path
 rerun with ``cycle_mode="blocked"`` (the CI gate keeps the per-tile
-speedup from collapsing — the chain silently re-serializing).
+speedup from collapsing — the chain silently re-serializing). ``--serve``
+adds the online path-serving section (``repro.serve`` throughput at two
+batch sizes; gated catastrophic-only).
 
     PYTHONPATH=src python -m benchmarks.regpath_bench            # paper-ish shape
     PYTHONPATH=src python -m benchmarks.regpath_bench --tiny     # CI smoke
-    PYTHONPATH=src python -m benchmarks.regpath_bench --tiny --distributed --sparse --kernels --cycle
+    PYTHONPATH=src python -m benchmarks.regpath_bench --tiny --distributed --sparse --kernels --cycle --serve
 """
 from __future__ import annotations
 
@@ -100,12 +102,45 @@ def _timed(fn):
     return out, time.perf_counter() - t0
 
 
+def bench_serve(X, y, path_len: int, opts: DGLMNETOptions,
+                batch_sizes=(64, 256), steps: int = 20) -> dict:
+    """Online-scoring throughput of the serving layer (``repro.serve``):
+    a certified path published into a ``PathStore``, synthetic hashed-
+    token traffic through the batcher, one jitted ``slab_path_spmv``
+    dispatch per drain. Reported per batch size — scores/sec is the
+    serving headline the CI gate floors (catastrophic-only: throughput
+    rides host-side packing and flaps more than path wall-clock)."""
+    import numpy as np
+
+    from repro.api import DenseDesign, LogisticL1
+    from repro.launch.serve_glm import make_traffic, serve_loop
+    from repro.serve import PathScorer, PathStore, RequestBatcher
+
+    path = LogisticL1(opts=opts).path(DenseDesign(X), y, path_len=path_len)
+    p = X.shape[1]
+    scorer = PathScorer(PathStore(path))
+    rng = np.random.default_rng(0)
+    out = {"path_len": len(path), "p": p, "batch": {}}
+    for bs in batch_sizes:
+        batcher = RequestBatcher(p, max_batch=bs)
+        reqs, lams = make_traffic(rng, p, bs * steps, path.lambdas)
+        for r, lam in zip(reqs[:bs], lams[:bs]):   # compile warm-up drain
+            batcher.submit(r, lam)
+        scorer.score(*batcher.drain())
+        total, secs, _ = serve_loop(scorer, batcher, reqs, lams, steps=steps)
+        out["batch"][str(bs)] = {
+            "scored": total, "warm_s": secs,
+            "scores_per_s": total / max(secs, 1e-12),
+        }
+    return out
+
+
 def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
         density: float = 0.2, k_true: int = 64,
         out_path: str = "BENCH_regpath.json",
         distributed: bool = False, sparse: bool = False,
         kernels: bool = False, cycle: bool = False, block: int = 16,
-        tiny: bool = False) -> dict:
+        serve: bool = False, tiny: bool = False) -> dict:
     # sparse ground truth (k_true << p): the large-p regime screening is
     # for — most features never activate anywhere on the path
     cfg = GLMConfig(name="regpath-bench", num_examples=int(n / 0.8),
@@ -228,6 +263,12 @@ def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
                 print(f"# kernel {name}: sparse {row['sparse_us']:.0f}us "
                       f"vs densify {row['densify_us']:.0f}us "
                       f"({row['speedup']:.2f}x)")
+    if serve:
+        report["serve"] = bench_serve(X, y, path_len, opts,
+                                      steps=10 if tiny else 30)
+        for bs, row in report["serve"]["batch"].items():
+            print(f"# serve batch {bs}: {row['scores_per_s']:,.0f} "
+                  f"scores/sec ({row['scored']} in {row['warm_s']:.3f}s)")
     with open(out_path, "w") as fh:
         json.dump(report, fh, indent=2)
     print(f"# seed-style: cold {seed_cold:.2f}s warm {seed_warm:.2f}s")
@@ -258,6 +299,9 @@ def main():
     ap.add_argument("--block", type=int, default=16,
                     help="B: coordinates per semi-parallel block for "
                          "--cycle (default 16)")
+    ap.add_argument("--serve", action="store_true",
+                    help="add the online path-serving section (scores/sec "
+                         "through repro.serve at two batch sizes)")
     ap.add_argument("--out", default="BENCH_regpath.json")
     ap.add_argument("--n", type=int, default=2048)
     ap.add_argument("--p", type=int, default=4096)
@@ -272,7 +316,7 @@ def main():
                  density=args.density, out_path=args.out,
                  distributed=args.distributed, sparse=args.sparse,
                  kernels=args.kernels, cycle=args.cycle, block=args.block,
-                 tiny=args.tiny)
+                 serve=args.serve, tiny=args.tiny)
     # Screening pays in proportion to p; tiny CI-smoke shapes sit below the
     # break-even point, so the strictly-faster gate applies to real shapes.
     if not args.tiny and not report["frontdoor_strictly_faster"]:

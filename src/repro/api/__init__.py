@@ -18,6 +18,7 @@ from repro.api.design import (  # noqa: F401
 from repro.api.estimator import (  # noqa: F401
     LogisticL1,
     PathPoint,
+    PathResult,
     lambda_max_design,
     make_design_eval,
 )

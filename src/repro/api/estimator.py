@@ -56,7 +56,10 @@ from repro.core.screening import (
     kkt_violations,
     strong_rule_mask,
 )
-from repro.api.types import PathPoint  # noqa: F401  (re-export: path output)
+from repro.api.types import (  # noqa: F401  (re-export: path output)
+    PathPoint,
+    PathResult,
+)
 from repro.core.screening import _nll_residual
 from repro.data.byfeature import k_class, scatter_features
 
@@ -374,7 +377,14 @@ class LogisticL1:
 
     def decision_function(self, data, *, beta=None):
         """X @ beta through the design (on-mesh slab margins for sharded
-        designs, replicated before returning)."""
+        designs, replicated before returning).
+
+        Lambda selection: with ``beta=None`` the scores come from the
+        estimator's current coefficients (``beta_`` — the LAST solve, i.e.
+        the smallest lambda after ``path``). To score at a specific path
+        operating point, pass ``beta=`` a row of ``PathResult.betas`` (or
+        serve the whole path batched via :class:`repro.serve.PathStore`,
+        which keeps every lambda device-resident)."""
         design = self._design(data)
         beta = self.beta_ if beta is None else beta
         if beta is None:
@@ -387,8 +397,48 @@ class LogisticL1:
         return scores
 
     def predict_proba(self, data, *, beta=None):
-        """P(y = +1 | x) = sigmoid(X @ beta)."""
+        """P(y = +1 | x) = sigmoid(X @ beta). Lambda selection follows
+        :meth:`decision_function` (``beta=None`` = last fitted lambda;
+        pass a ``PathResult`` beta row for a specific operating point)."""
         return jax.nn.sigmoid(self.decision_function(data, beta=beta))
+
+    def predict(self, data, *, beta=None, threshold: float = 0.0):
+        """Hard labels in {-1, +1} at a margin ``threshold`` (0.0 =
+        P(y=+1) >= 0.5), matching the +-1 label convention the logistic
+        NLL is written in."""
+        scores = self.decision_function(data, beta=beta)
+        return jnp.where(scores >= threshold, 1.0, -1.0).astype(jnp.float32)
+
+    # -- sklearn-style surface ---------------------------------------------
+
+    @property
+    def coef_(self):
+        """Fitted coefficients (p,) — sklearn naming for ``beta_``."""
+        return self.beta_
+
+    @property
+    def intercept_(self) -> float:
+        """Always 0.0: d-GLMNET (paper Algorithm 1) fits no intercept —
+        append a constant feature column if one is needed."""
+        return 0.0
+
+    _PARAM_NAMES = ("opts", "mesh", "warm_start")
+
+    def get_params(self, deep: bool = True) -> dict:
+        """sklearn-style constructor-parameter dict (``deep`` accepted for
+        signature compatibility; ``opts`` is returned as-is)."""
+        return {name: getattr(self, name) for name in self._PARAM_NAMES}
+
+    def set_params(self, **params) -> "LogisticL1":
+        """sklearn-style parameter update; unknown names raise."""
+        for name, value in params.items():
+            if name not in self._PARAM_NAMES:
+                raise ValueError(
+                    f"unknown parameter {name!r} for LogisticL1: valid "
+                    f"parameters are {self._PARAM_NAMES}"
+                )
+            setattr(self, name, value)
+        return self
 
     # -- the regularization path -------------------------------------------
 
@@ -407,12 +457,18 @@ class LogisticL1:
         carry_working_set: bool = True,
         violation_budget: Optional[int] = 512,
         densify: Optional[bool] = None,
-    ) -> List[PathPoint]:
+    ) -> PathResult:
         """Warm-started screened regularization path (paper Algorithm 5):
         lambda = lambda_max * 2^{-i}, i = 1..path_len, each point solved
         restricted to the strong-rule/KKT-certified working set
         (capacity-bucketed so the whole path reuses a handful of compiled
         programs), warm-started from the previous solution.
+
+        Returns a :class:`PathResult` — the whole path's coefficients as
+        one stacked ``(L, p)`` array plus per-lambda metrics/telemetry.
+        It iterates and indexes like the historical list of
+        :class:`PathPoint`, and ``PathResult.save``/``load`` persist it
+        for fit-once/serve-many (:class:`repro.serve.PathStore`).
 
         ``eval_fn(beta)`` computes per-lambda test metrics (the paper's
         Figure 1); pair it with :func:`make_design_eval` to stream
@@ -545,7 +601,7 @@ class LogisticL1:
                 )
         self.beta_ = points[-1].beta if points else None
         self.lam_ = lams[-1] if lams else None
-        return points
+        return PathResult.from_points(points)
 
 
 # ---------------------------------------------------------------------------

@@ -3,14 +3,17 @@
 Import-order note: ``repro.core.__init__`` imports ``core.regpath`` (a
 shim over :mod:`repro.api.estimator`), while the estimator imports half of
 ``repro.core`` — a cycle if the shim needed the full estimator at import
-time. It only needs :class:`PathPoint`, so that lives here with no
-repro-internal imports at all.
+time. It only needs :class:`PathPoint`/:class:`PathResult`, so those live
+here with no repro-internal imports at import time (``PathResult.save`` /
+``load`` pull in :mod:`repro.checkpoint` lazily — itself a leaf).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Iterator, List, Optional, Sequence
 
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass
@@ -24,3 +27,148 @@ class PathPoint:
     beta: jnp.ndarray
     metrics: dict = field(default_factory=dict)
     screen: dict = field(default_factory=dict)   # active-set telemetry
+
+
+@dataclass
+class PathResult:
+    """The certified regularization path as one typed object.
+
+    ``LogisticL1.path`` used to return a bare ``list[PathPoint]`` that died
+    with the process; this is the loss-agnostic replacement the serving
+    layer (:class:`repro.serve.PathStore`) loads: the whole path's
+    coefficients as ONE stacked ``(L, p)`` array (device-residency and
+    sharding are one ``device_put`` away), per-lambda scalars as arrays,
+    and the per-lambda metric/telemetry dicts alongside.
+
+    List back-compat: iteration, ``len``, and integer/slice indexing yield
+    :class:`PathPoint` views (``pts[-1].beta``, ``max(pts, key=...)``,
+    ``zip(pts, ref)`` all keep working), so the historical list-of-points
+    consumers — examples, benchmarks, the legacy ``regularization_path``
+    shims — need no change.
+    """
+
+    lambdas: np.ndarray          # (L,) descending lambda grid
+    betas: jnp.ndarray           # (L, p) stacked coefficients
+    nnz: np.ndarray              # (L,) int64
+    f: np.ndarray                # (L,) float64 objective values
+    n_iters: np.ndarray          # (L,) int64
+    metrics: List[dict] = field(default_factory=list)   # per-lambda eval
+    screen: List[dict] = field(default_factory=list)    # active-set telemetry
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_points(cls, points: Sequence[PathPoint]) -> "PathResult":
+        """Stack a list of per-lambda points into one result."""
+        pts = list(points)
+        return cls(
+            lambdas=np.asarray([p.lam for p in pts], np.float64),
+            betas=jnp.stack([p.beta for p in pts]) if pts
+            else jnp.zeros((0, 0), jnp.float32),
+            nnz=np.asarray([p.nnz for p in pts], np.int64),
+            f=np.asarray([p.f for p in pts], np.float64),
+            n_iters=np.asarray([p.n_iters for p in pts], np.int64),
+            metrics=[dict(p.metrics) for p in pts],
+            screen=[dict(p.screen) for p in pts],
+        )
+
+    # -- list back-compat ---------------------------------------------------
+
+    def __len__(self) -> int:
+        return int(self.lambdas.shape[0])
+
+    def point(self, i: int) -> PathPoint:
+        """The ``i``-th path point as a :class:`PathPoint` view (the beta
+        row is a view into the stacked array, not a copy)."""
+        return PathPoint(
+            lam=float(self.lambdas[i]), nnz=int(self.nnz[i]),
+            f=float(self.f[i]), n_iters=int(self.n_iters[i]),
+            beta=self.betas[i],
+            metrics=self.metrics[i] if self.metrics else {},
+            screen=self.screen[i] if self.screen else {},
+        )
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self.point(j) for j in range(len(self))[i]]
+        n = len(self)
+        if i < -n or i >= n:
+            raise IndexError(f"path index {i} out of range for {n} points")
+        return self.point(i % n)
+
+    def __iter__(self) -> Iterator[PathPoint]:
+        for i in range(len(self)):
+            yield self.point(i)
+
+    # -- lambda selection ---------------------------------------------------
+
+    def index_of(self, lam: float) -> int:
+        """Operating-point selection: the index of the stored lambda
+        nearest to ``lam`` in log space (the grid is geometric, so log
+        distance — not absolute — picks the intended point)."""
+        if len(self) == 0:
+            raise ValueError("empty path")
+        lams = np.maximum(np.asarray(self.lambdas, np.float64), 1e-300)
+        return int(np.argmin(np.abs(np.log(lams) - np.log(max(lam, 1e-300)))))
+
+    # -- persistence (fit once, serve many) ---------------------------------
+
+    def save(self, directory: str) -> str:
+        """Persist via the repo checkpointer: the stacked betas as the
+        array payload, everything else (lambdas, per-lambda scalars,
+        metric/telemetry dicts) in the manifest's JSON meta — so a serving
+        process can load the path without the training code or data."""
+        from repro.checkpoint import save_pytree
+
+        meta = {
+            "kind": "PathResult",
+            "lambdas": [float(v) for v in self.lambdas],
+            "nnz": [int(v) for v in self.nnz],
+            "f": [float(v) for v in self.f],
+            "n_iters": [int(v) for v in self.n_iters],
+            "metrics": [_jsonable(d) for d in self.metrics],
+            "screen": [_jsonable(d) for d in self.screen],
+            "p": int(self.betas.shape[1]) if self.betas.ndim == 2 else 0,
+            "dtype": str(self.betas.dtype),
+        }
+        return save_pytree({"betas": self.betas}, directory, meta=meta)
+
+    @classmethod
+    def load(cls, directory: str, *, sharding=None) -> "PathResult":
+        """Inverse of :meth:`save`. ``sharding`` (a NamedSharding) places
+        the stacked betas as they load — e.g. ``P(None, "model")`` to land
+        them feature-sharded for a mesh :class:`~repro.serve.PathStore`."""
+        from repro.checkpoint import load_pytree, read_meta
+
+        meta = read_meta(directory)
+        if meta is None or meta.get("kind") != "PathResult":
+            raise ValueError(
+                f"{directory} is not a PathResult checkpoint (missing or "
+                f"mismatched manifest meta)"
+            )
+        like = {"betas": jnp.zeros((len(meta["lambdas"]), meta["p"]),
+                                   jnp.dtype(meta["dtype"]))}
+        shardings = None if sharding is None else {"betas": sharding}
+        tree = load_pytree(directory, like, shardings=shardings)
+        return cls(
+            lambdas=np.asarray(meta["lambdas"], np.float64),
+            betas=tree["betas"],
+            nnz=np.asarray(meta["nnz"], np.int64),
+            f=np.asarray(meta["f"], np.float64),
+            n_iters=np.asarray(meta["n_iters"], np.int64),
+            metrics=list(meta["metrics"]),
+            screen=list(meta["screen"]),
+        )
+
+
+def _jsonable(d: Optional[dict]) -> dict:
+    """Per-lambda dicts hold numpy scalars (metrics) — coerce for JSON."""
+    out = {}
+    for k, v in (d or {}).items():
+        if isinstance(v, (np.integer,)):
+            out[k] = int(v)
+        elif isinstance(v, (np.floating,)):
+            out[k] = float(v)
+        else:
+            out[k] = v
+    return out

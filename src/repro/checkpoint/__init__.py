@@ -1,1 +1,5 @@
-from repro.checkpoint.checkpointer import load_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    load_pytree,
+    read_meta,
+    save_pytree,
+)

@@ -25,11 +25,18 @@ def _keys(tree):
     return flat, treedef, names
 
 
-def save_pytree(tree: Any, directory: str, *, step: Optional[int] = None) -> str:
+def save_pytree(tree: Any, directory: str, *, step: Optional[int] = None,
+                meta: Optional[dict] = None) -> str:
+    """``meta`` is an optional JSON-serializable side channel stored in the
+    manifest (read back via :func:`read_meta`) — for the non-array context
+    a checkpoint consumer needs to rebuild itself (e.g. the per-lambda
+    telemetry of a persisted regularization path)."""
     os.makedirs(directory, exist_ok=True)
     flat, _, names = _keys(tree)
     arrays = {}
     manifest = {"leaves": [], "step": step}
+    if meta is not None:
+        manifest["meta"] = meta
     for name, (_, leaf) in zip(names, flat):
         arr = np.asarray(jax.device_get(leaf))
         dtype_name = str(arr.dtype)
@@ -44,6 +51,12 @@ def save_pytree(tree: Any, directory: str, *, step: Optional[int] = None) -> str
     with open(os.path.join(directory, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     return directory
+
+
+def read_meta(directory: str) -> Optional[dict]:
+    """The ``meta`` dict stored by :func:`save_pytree`, or None."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        return json.load(f).get("meta")
 
 
 def load_pytree(directory: str, like: Any, *, shardings: Any = None) -> Any:

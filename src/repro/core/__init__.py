@@ -24,6 +24,7 @@ from repro.core.objective import (  # noqa: F401
 )
 from repro.core.regpath import (  # noqa: F401
     PathPoint,
+    PathResult,
     regularization_path,
     regularization_path_distributed,
 )

@@ -25,8 +25,8 @@ import jax.numpy as jnp
 
 from repro.core.dglmnet import DGLMNETOptions
 
-# re-export: PathPoint moved to repro.api with the path engine
-from repro.api.types import PathPoint  # noqa: F401
+# re-export: PathPoint/PathResult moved to repro.api with the path engine
+from repro.api.types import PathPoint, PathResult  # noqa: F401
 
 
 def regularization_path(
@@ -43,8 +43,10 @@ def regularization_path(
     max_kkt_rounds: int = 8,
     carry_working_set: bool = True,
     violation_budget: Optional[int] = 512,
-) -> List[PathPoint]:
-    """Single-process path: one PathPoint per lambda (decreasing).
+) -> PathResult:
+    """Single-process path: one PathPoint per lambda (decreasing),
+    returned as a :class:`PathResult` (stacked betas; iterates and indexes
+    like the historical list of points).
     ``eval_fn(beta)`` computes test metrics (e.g. AUPRC) per point — the
     paper's Figure 1. ``screen=False`` reproduces the seed's full-p
     warm-started loop (the oracle the screening tests compare against).
@@ -76,7 +78,7 @@ def regularization_path_distributed(
     max_kkt_rounds: int = 8,
     carry_working_set: bool = True,
     violation_budget: Optional[int] = 512,
-) -> List[PathPoint]:
+) -> PathResult:
     """The screened path with every restricted solve on the mesh
     (Algorithm 5 run distributed — the paper's webspam-scale regime). In
     the sparse forms the strong-rule/KKT gradient passes stream the slabs

@@ -186,6 +186,40 @@ def slab_spmv(rows, vals, d, *, n_loc: int):
     return out[:n_loc]
 
 
+def slab_path_spmv(rows, vals, lam_idx, betas, *, n_loc: int):
+    """Per-example-lambda slab SpMV: the serving layer's batched scoring
+    primitive (``repro.serve``).
+
+    rows/vals: (T, K) by-feature request slab with *local* example (=
+    request row) indices, sentinel ``n_loc``; ``lam_idx`` (n_loc,) int32
+    picks each example's operating point in the stacked ``betas`` (L, T)
+    coefficient path. Returns the (n_loc,) scores
+    ``out[i] = sum_jk vals[j,k] * betas[lam_idx[i], j] [rows[j,k] == i]``.
+
+    The per-entry coefficient gather replaces ``d[:, None]`` in
+    :func:`slab_spmv`; everything downstream (sentinel masking, the CPU
+    scatter-add, the TPU Pallas row-block accumulate) is shared, so at a
+    uniform ``lam_idx == l`` the scores are bit-identical to
+    ``slab_spmv(rows, vals, betas[l], n_loc=n_loc)`` — the serve-vs-
+    ``decision_function`` equivalence the tests pin down.
+    """
+    valid = rows < n_loc
+    safe = jnp.minimum(rows, n_loc)
+    # sentinel rows read lam_idx[0] through the clamp; their dv is zeroed
+    # by the validity mask so the read value never matters
+    li = jnp.take(lam_idx, jnp.where(valid, rows, 0))            # (T, K)
+    feat = jnp.arange(rows.shape[0], dtype=jnp.int32)[:, None]
+    bsel = betas.astype(jnp.float32)[li, feat]                   # (T, K)
+    dv = jnp.where(valid, vals, 0.0).astype(jnp.float32) * bsel
+    if _on_tpu():
+        from repro.kernels.sparse_slab import slab_spmv_pallas
+
+        return slab_spmv_pallas(safe, dv, n_loc=n_loc, interpret=False)
+    out = jnp.zeros(n_loc + 1, jnp.float32)
+    out = out.at[safe.reshape(-1)].add(dv.reshape(-1))
+    return out[:n_loc]
+
+
 def slab_corr(rows, vals, v):
     """Per-feature correlation ``X_F^T v`` from a slab: the gather-reduce
     behind the sparse screen (sentinel slots masked to exact zero)."""

@@ -1,0 +1,29 @@
+"""repro.serve — batched online scoring of the certified reg path.
+
+The d-GLMNET training side hands over a typed ``PathResult`` (the whole
+certified regularization path); this package serves it:
+
+* :class:`PathStore` — the ``(L, p)`` coefficient stack device-resident
+  (replicated locally, P(model)-feature-sharded on a mesh), versioned,
+  hot-swappable without dropping in-flight batches;
+* :mod:`~repro.serve.ingest` — deterministic hashed sparse-feature
+  ingestion packing request batches into the training kernels' by-feature
+  slab layout;
+* :class:`RequestBatcher` — accumulate/drain batching with power-of-two
+  shape classes;
+* :class:`PathScorer` — one jitted ``slab_path_spmv`` dispatch per batch,
+  each request row picking its own lambda operating point on device;
+  scores bit-identical to ``LogisticL1.decision_function``.
+
+Entry point: ``python -m repro.launch.serve_glm``.
+"""
+from repro.serve.batcher import RequestBatcher, batch_capacity  # noqa: F401
+from repro.serve.ingest import (  # noqa: F401
+    PackedBatch,
+    encode_request,
+    hash_token,
+    k_capacity,
+    pack_requests,
+)
+from repro.serve.scoring import PathScorer, make_path_margins  # noqa: F401
+from repro.serve.store import PathStore, StoreSnapshot  # noqa: F401

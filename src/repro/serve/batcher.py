@@ -1,0 +1,84 @@
+"""Request batching for the serving loop.
+
+``RequestBatcher`` accumulates live requests (hashed-token feature maps +
+a requested lambda each) and drains them as one :class:`PackedBatch` per
+scoring dispatch. Two shape-bounding rules keep the compiled-program count
+small over a serving process's lifetime:
+
+* the batch extent is quantized to power-of-two capacity classes
+  (:func:`batch_capacity`) up to ``max_batch``, mirroring the slab-K
+  classes of :func:`~repro.serve.ingest.k_capacity`;
+* hashing/encoding happens at ``submit`` time (spreading the host work
+  across arrivals), packing at ``drain`` time (one vectorized pass).
+
+Lambdas stay raw floats until scoring: ``PathScorer`` resolves them
+against the snapshot it scores with, so a hot-swap that re-grids the path
+re-resolves naturally instead of serving stale indices.
+"""
+from __future__ import annotations
+
+import threading
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.serve.ingest import PackedBatch, Request, encode_request, \
+    pack_requests
+
+
+def batch_capacity(b: int, *, b_min: int = 8, b_max: int = 4096) -> int:
+    """Power-of-two batch capacity class covering ``b`` rows (clamped to
+    ``[b_min, b_max]``) — bounds the distinct scoring-program batch shapes
+    to O(log max_batch)."""
+    cap = max(b_min, 1)
+    while cap < min(b, b_max):
+        cap *= 2
+    return cap
+
+
+class RequestBatcher:
+    """Thread-safe accumulate/drain bridge between request arrival and the
+    batched scoring dispatch.
+
+    ``dp``/``pad_p_to`` fix the packed slab geometry (pass the serving
+    store's mesh data extent and ``store.pad_p_to``; the defaults are the
+    local single-device geometry). ``max_batch`` caps one drain — leftover
+    requests stay queued for the next.
+    """
+
+    def __init__(self, p: int, *, max_batch: int = 256, dp: int = 1,
+                 pad_p_to: int = 1, k_min: int = 8):
+        self.p = p
+        self.max_batch = max_batch
+        self.dp = dp
+        self.pad_p_to = pad_p_to
+        self.k_min = k_min
+        self._lock = threading.Lock()
+        self._pending: List[Tuple[Tuple[np.ndarray, np.ndarray], float]] = []
+
+    def submit(self, request: Request, lam: float) -> None:
+        """Enqueue one request (hashed + encoded immediately)."""
+        enc = encode_request(request, self.p)
+        with self._lock:
+            self._pending.append((enc, float(lam)))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def drain(self) -> Tuple[PackedBatch, np.ndarray]:
+        """Pack up to ``max_batch`` queued requests into one batch.
+
+        Returns ``(batch, lams)``; ``lams[i]`` belongs to batch row ``i``.
+        An empty queue drains to an all-padding batch (``n_live == 0``).
+        """
+        with self._lock:
+            take, self._pending = (self._pending[:self.max_batch],
+                                   self._pending[self.max_batch:])
+        encoded = [enc for enc, _ in take]
+        lams = np.asarray([lam for _, lam in take], np.float64)
+        cap = batch_capacity(max(len(encoded), 1), b_max=self.max_batch)
+        cap += (-cap) % max(self.dp, 1)
+        batch = pack_requests(encoded, self.p, batch_cap=cap, dp=self.dp,
+                              pad_p_to=self.pad_p_to, k_min=self.k_min)
+        return batch, lams

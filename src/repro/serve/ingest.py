@@ -1,0 +1,160 @@
+"""Hashed sparse-feature ingestion: live requests -> by-feature slabs.
+
+Online traffic arrives as sparse token->value maps over an unbounded
+vocabulary; the fitted model lives on a fixed ``p``-dimensional feature
+axis. The bridge is the classic hashing trick, made *deterministic* so a
+request scores identically across processes and restarts:
+
+* :func:`hash_token` is CRC-32 (not Python's per-process-salted ``hash``),
+  so ``token -> index`` is stable across interpreter launches;
+* colliding tokens have their values **summed in sorted-token order**
+  (:func:`encode_request`), so the collided value is independent of the
+  caller's dict insertion order;
+* exact-zero values are dropped at encode time — an all-zero request packs
+  identically to an empty one (both are all-sentinel slabs that score 0).
+
+:func:`pack_requests` then packs a batch of encoded requests into the
+repo's by-feature ``(p, DP, K)`` slab layout (paper Table 1, request rows
+playing the example axis): the SAME layout the training kernels consume,
+so batched scoring is one ``kernels.ops.slab_path_spmv`` dispatch —
+locally or per mesh shard — with no densify and no per-request loop.
+Shapes are quantized (power-of-two K classes, fixed batch capacity) so a
+serving process compiles a handful of programs, not one per batch.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import Iterable, Mapping, Sequence, Tuple, Union
+
+import numpy as np
+
+Request = Union[Mapping[str, float], Iterable[Tuple[str, float]]]
+
+
+def hash_token(token: str, p: int) -> int:
+    """Deterministic token -> feature index in [0, p): CRC-32 of the
+    UTF-8 bytes, reduced mod ``p``. Stable across processes (unlike
+    builtin ``hash``, which is salted per interpreter)."""
+    return zlib.crc32(token.encode("utf-8")) % p
+
+
+def encode_request(request: Request, p: int) -> Tuple[np.ndarray, np.ndarray]:
+    """One request -> sorted ``(idx, val)`` arrays on the hashed axis.
+
+    Colliding tokens sum in sorted-token order (determinism under dict
+    reordering); exact-zero accumulated values are dropped so empty and
+    all-zero requests encode identically (no live slots)."""
+    items = request.items() if isinstance(request, Mapping) else request
+    acc: dict = {}
+    for token, value in sorted(items, key=lambda kv: kv[0]):
+        j = hash_token(token, p)
+        acc[j] = acc.get(j, 0.0) + float(value)
+    idx = np.asarray(sorted(j for j in acc if acc[j] != 0.0), np.int64)
+    val = np.asarray([acc[j] for j in idx], np.float32)
+    return idx, val
+
+
+def k_capacity(k_need: int, *, k_min: int = 8) -> int:
+    """Power-of-two slab-capacity class (the serving twin of
+    ``data.byfeature.k_class``, with no global K ceiling): bounds the
+    number of distinct compiled scoring shapes to O(log K)."""
+    cap = max(k_min, 1)
+    while cap < k_need:
+        cap *= 2
+    return cap
+
+
+@dataclass(frozen=True)
+class PackedBatch:
+    """A request batch in mesh-ready slab form.
+
+    ``row_idx``/``values`` are ``(p_pad, DP, K)`` by-feature slabs whose
+    "examples" are the batch's request rows, split into ``DP`` contiguous
+    shards of ``n_loc = batch_cap // DP`` local rows (sentinel ``n_loc``)
+    — exactly the operand layout of ``core.distributed.make_slab_margins``
+    and the serve scoring steps. Rows >= ``n_live`` are padding (all-
+    sentinel; they score 0 and are trimmed before scores leave the
+    scorer).
+    """
+
+    row_idx: np.ndarray          # (p_pad, DP, K) int32
+    values: np.ndarray           # (p_pad, DP, K) float32
+    n_live: int                  # real requests in the batch
+    batch_cap: int               # padded batch extent (= DP * n_loc)
+    p: int                       # original (unpadded) feature count
+
+    @property
+    def dp(self) -> int:
+        return int(self.row_idx.shape[1])
+
+    @property
+    def n_loc(self) -> int:
+        return self.batch_cap // max(self.dp, 1)
+
+    @property
+    def p_pad(self) -> int:
+        return int(self.row_idx.shape[0])
+
+
+def pack_requests(
+    encoded: Sequence[Tuple[np.ndarray, np.ndarray]],
+    p: int,
+    *,
+    batch_cap: int = None,
+    dp: int = 1,
+    pad_p_to: int = 1,
+    k_min: int = 8,
+) -> PackedBatch:
+    """Pack encoded requests into a :class:`PackedBatch`.
+
+    ``batch_cap`` (default: the batch size rounded up to ``dp``) fixes the
+    padded request extent; ``pad_p_to`` rounds the feature axis up (mesh
+    stores pass ``model_dim * tile`` so the slab partition lines up with
+    the P(model)-sharded coefficient stack); ``k_min`` floors the
+    power-of-two K class. Slabs are front-packed (live slots first, rows
+    ascending within a feature) — the same invariant the training layout
+    guarantees.
+    """
+    b = len(encoded)
+    if batch_cap is None:
+        batch_cap = max(b, 1)
+    batch_cap += (-batch_cap) % max(dp, 1)
+    if b > batch_cap:
+        raise ValueError(f"{b} requests exceed batch_cap={batch_cap}")
+    if batch_cap % dp:
+        raise ValueError(f"dp={dp} must divide batch_cap={batch_cap}")
+    n_loc = batch_cap // dp
+    p_pad = p + (-p) % max(pad_p_to, 1)
+
+    if b:
+        feats = np.concatenate([idx for idx, _ in encoded])
+        vals = np.concatenate([val for _, val in encoded])
+        rows = np.concatenate([
+            np.full(len(idx), i, np.int64) for i, (idx, _) in enumerate(encoded)
+        ])
+    else:
+        feats = rows = np.zeros(0, np.int64)
+        vals = np.zeros(0, np.float32)
+    if feats.size and (feats.min() < 0 or feats.max() >= p):
+        raise ValueError(f"hashed index out of range [0, {p})")
+
+    shard = rows // max(n_loc, 1)
+    loc = rows - shard * n_loc
+    # rank of each entry within its (feature, shard) group — the same
+    # stable-sort construction as data.byfeature._regroup_slabs, so the
+    # packed slabs carry the training layout's front-packing invariant
+    group = feats * dp + shard
+    counts = np.bincount(group, minlength=p * dp)
+    order = np.argsort(group, kind="stable")
+    starts = np.concatenate([[0], np.cumsum(counts)])[:-1]
+    rank = np.arange(order.size) - starts[group[order]]
+
+    k = k_capacity(int(counts.max()) if counts.size else 1, k_min=k_min)
+    row_idx = np.full((p_pad, dp, k), n_loc, np.int32)
+    values = np.zeros((p_pad, dp, k), np.float32)
+    g = group[order]
+    row_idx[g // dp, g % dp, rank] = loc[order]
+    values[g // dp, g % dp, rank] = vals[order]
+    return PackedBatch(row_idx=row_idx, values=values, n_live=b,
+                       batch_cap=batch_cap, p=p)

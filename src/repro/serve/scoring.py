@@ -1,0 +1,138 @@
+"""Batched path scoring: one jitted dispatch per request batch.
+
+The scoring step is ``kernels.ops.slab_path_spmv`` over a
+:class:`~repro.serve.ingest.PackedBatch` — the by-feature slab layout the
+training kernels consume, request rows playing the example axis, each row
+gathering its own operating point from the store's stacked ``(L, p)``
+coefficients. Locally that is one jitted call; on a mesh it is the same
+``shard_map`` shape as ``core.distributed.make_slab_margins`` (feature
+shards run the slab kernel, one psum over ``model`` assembles the scores)
+with the beta *stack* left P(model)-sharded in place. Either way exactly
+one program launches per batch and only the ``(batch,)`` scores travel to
+host.
+
+Because the per-entry coefficient gather feeds the *same* masking/scatter
+machinery as ``slab_spmv`` (see ``slab_path_spmv``'s docstring), a batch
+whose rows all request lambda ``l`` scores bit-identically to
+``LogisticL1.decision_function(design, beta=path[l])`` on the same slabs —
+locally and through the mesh.
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.serve.ingest import PackedBatch
+from repro.serve.store import PathStore, StoreSnapshot
+
+
+@partial(jax.jit, static_argnames=("n_loc",))
+def _score_local(rows, vals, lam_idx, betas, *, n_loc: int):
+    return kops.slab_path_spmv(rows, vals, lam_idx, betas, n_loc=n_loc)
+
+
+@lru_cache(maxsize=None)
+def make_path_margins(mesh, n_loc: int, model_axis: str = "model"):
+    """Sharded batched path scoring ``(row_idx, values, lam_idx, betas) ->
+    scores`` — ``core.distributed.make_slab_margins`` with the replicated
+    beta vector replaced by the P(model)-sharded ``(L, p_pad)`` stack plus
+    a per-row operating-point index. Each (model, data) shard gathers its
+    own coefficient block rows and runs the slab kernel; one psum over
+    ``model`` assembles the exact scores. Cached per (mesh, n_loc) so a
+    serving process compiles each batch geometry once."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core.distributed import _data_axes
+
+    daxes = _data_axes(mesh)
+    dspec = P(daxes) if daxes else P()
+
+    @jax.jit
+    @partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(model_axis, daxes, None), P(model_axis, daxes, None),
+                  dspec, P(None, model_axis)),
+        out_specs=dspec,
+    )
+    def path_margins(row_idx, values, lam_idx, betas):
+        rows, vals = row_idx[:, 0, :], values[:, 0, :]
+        s_loc = kops.slab_path_spmv(rows, vals, lam_idx, betas,
+                                    n_loc=n_loc)
+        return jax.lax.psum(s_loc, model_axis)
+
+    return path_margins
+
+
+class PathScorer:
+    """Scores request batches against a :class:`PathStore`.
+
+    Each :meth:`score` call takes ONE store snapshot up front and resolves
+    lambdas + scores entirely against it, so a concurrent
+    ``PathStore.swap`` can never mix coefficient versions inside a batch;
+    the returned version says which path the whole batch was scored with.
+    """
+
+    def __init__(self, store: PathStore):
+        self.store = store
+
+    def score(self, batch: PackedBatch,
+              lams) -> Tuple[np.ndarray, int]:
+        """Score a packed batch; ``lams[i]`` is row i's requested lambda.
+
+        Returns ``(scores, version)``: ``scores`` are the ``(n_live,)``
+        margins x_i^T beta_{lam_i} (feed ``jax.nn.sigmoid`` for
+        probabilities), ``version`` the store version used for every row.
+        """
+        snap = self.store.snapshot          # the one read — never re-read
+        lams = np.asarray(lams, np.float64).reshape(-1)
+        if lams.shape[0] != batch.n_live:
+            raise ValueError(
+                f"{lams.shape[0]} lambdas for {batch.n_live} requests")
+        if batch.p != snap.p:
+            raise ValueError(
+                f"batch hashed to p={batch.p} but the store serves "
+                f"p={snap.p}")
+        if batch.p_pad != snap.p_pad:
+            raise ValueError(
+                f"batch feature padding {batch.p_pad} != store padding "
+                f"{snap.p_pad} — pack with pad_p_to=store.pad_p_to")
+        lam_idx = np.zeros(batch.batch_cap, np.int32)
+        if batch.n_live:
+            lam_idx[:batch.n_live] = snap.indices_of(lams)
+        scores = self._dispatch(batch, lam_idx, snap)
+        return np.asarray(scores)[:batch.n_live], snap.version
+
+    def _dispatch(self, batch: PackedBatch, lam_idx: np.ndarray,
+                  snap: StoreSnapshot):
+        mesh = self.store.mesh
+        if mesh is None:
+            if batch.dp != 1:
+                raise ValueError(
+                    f"local scoring needs dp=1 slabs, got dp={batch.dp}")
+            return _score_local(
+                jnp.asarray(batch.row_idx[:, 0, :]),
+                jnp.asarray(batch.values[:, 0, :]),
+                jnp.asarray(lam_idx), snap.betas, n_loc=batch.batch_cap)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core.distributed import _data_axes, _data_extent
+
+        if batch.dp != _data_extent(mesh):
+            raise ValueError(
+                f"batch dp={batch.dp} != mesh data extent "
+                f"{_data_extent(mesh)} — pack with dp=store ddim")
+        daxes = _data_axes(mesh)
+        slab_sh = NamedSharding(mesh, P("model", daxes, None))
+        fn = make_path_margins(mesh, batch.n_loc)
+        return fn(
+            jax.device_put(batch.row_idx, slab_sh),
+            jax.device_put(batch.values, slab_sh),
+            jax.device_put(lam_idx, NamedSharding(mesh, P(daxes))),
+            snap.betas)
