@@ -80,6 +80,7 @@ def run():
                 fit(X, y, lam, opts=opts)          # compile
                 with Timer() as t:
                     res = fit(X, y, lam, opts=opts)
+                    t.block = res.beta
                 gap = (res.f - ref.f) / abs(ref.f)
                 itt = iters_to_tol(res.objective_history, ref.f)
                 per_iter_us = t.dt * 1e6 / max(res.n_iters, 1)

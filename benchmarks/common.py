@@ -35,13 +35,22 @@ def load_twin(name: str) -> GLMDataset:
 
 @dataclass
 class Timer:
+    """``with Timer() as t: t.block = fn()`` — assign the produced value
+    to ``block`` inside the with-body and ``__exit__`` runs
+    ``jax.block_until_ready`` on it before stopping the clock, so ``dt``
+    measures the JAX work, not the async enqueue. Leave ``block`` unset
+    only when the timed section already ends on host values."""
+
     t0: float = 0.0
+    block: object = None
 
     def __enter__(self):
         self.t0 = time.perf_counter()
         return self
 
     def __exit__(self, *a):
+        if a[0] is None and self.block is not None:
+            jax.block_until_ready(self.block)
         self.dt = time.perf_counter() - self.t0
 
 

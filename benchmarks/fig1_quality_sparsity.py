@@ -27,6 +27,7 @@ def run(verbose: bool = True):
                 X, y, path_len=PATH_LEN,
                 opts=DGLMNETOptions(num_blocks=16, tile=64, max_iters=50),
                 eval_fn=eval_fn)
+            t_d.block = pts.betas
         for p in pts:
             rows.append((name, "d-glmnet", f"{p.lam:.4g}", p.nnz,
                          p.metrics["auprc"]))

@@ -98,7 +98,7 @@ def distributed_path(data, y, path_len: int, opts: DGLMNETOptions, mesh):
 
 def _timed(fn):
     t0 = time.perf_counter()
-    out = fn()
+    out = jax.block_until_ready(fn())
     return out, time.perf_counter() - t0
 
 

@@ -28,6 +28,7 @@ def run():
 
         with Timer() as t_fit:
             res = fit(X, y, lam, opts=opts)
+            t_fit.block = res.beta
         t_iter = t_fit.dt / max(res.n_iters, 1)
 
         # line-search share: time the jitted line search alone
@@ -47,7 +48,7 @@ def run():
 
         truncated_gradient_fit(X, y, lam, opts=TGOptions(num_machines=16, passes=1))
         with Timer() as t_tg:
-            truncated_gradient_fit(
+            t_tg.block = truncated_gradient_fit(
                 X, y, lam, opts=TGOptions(num_machines=16, passes=4))
         t_pass = t_tg.dt / 4
 

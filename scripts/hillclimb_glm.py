@@ -50,6 +50,7 @@ def lower_variant(*, name, n, p, mesh, tile, dtype=jnp.float32, unroll=True,
     t0 = time.time()
     with unroll_context(unroll):
         compiled = jax.jit(step).lower(*args).compile()
+    # allow[bench-timing]: times lower().compile() — a host-synchronous call, nothing async to block on
     dt_c = time.time() - t0
     chips = ddim * mdim
     # useful flops for one outer iteration (Gram form, unpadded p):

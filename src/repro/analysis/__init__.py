@@ -1,0 +1,17 @@
+"""repro.analysis — invariant lint pass + runtime sanitizers.
+
+Static side (``python -m repro.analysis src tests benchmarks``): AST
+rules encoding this repo's hard-won invariants — the sharded-concat
+single-home guard, psum-axis discipline, host-sync-in-jit, retrace
+hazards, bench-timing sync, Pallas kernel conventions, and the dead-code
+inventory. See ``repro.analysis.rules`` and README "Static analysis &
+sanitizers".
+
+Runtime side (``repro.analysis.sanitize``): a transfer sanitizer pinning
+the engine's one-``device_get``-per-solve contract and a compile-counter
+budget certifying the warm-started path retraces zero times per lambda.
+The static import surface of this package is deliberately JAX-free so
+the lint lane runs anywhere; ``sanitize`` imports JAX lazily.
+"""
+from repro.analysis.findings import Finding  # noqa: F401
+from repro.analysis.runner import Report, run_analysis  # noqa: F401

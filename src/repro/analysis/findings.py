@@ -1,0 +1,114 @@
+"""Finding record + pragma / allowlist suppression logic."""
+from __future__ import annotations
+
+import fnmatch
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+#: per-line pragma: ``# allow[rule-id]: one-line justification``
+#: A pragma without a justification does NOT suppress — every allowlist
+#: entry must say why (the acceptance bar for the whole suite).
+PRAGMA_RE = re.compile(r"#\s*allow\[(?P<rule>[a-z0-9-]+)\]\s*:\s*(?P<why>\S.*)?$")
+PRAGMA_ANY_RE = re.compile(r"#\s*allow\[")
+
+
+@dataclass(frozen=True)
+class Finding:
+    file: str
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line} · {self.rule} · {self.message}"
+
+    def as_json(self) -> dict:
+        return {"file": self.file, "line": self.line, "rule": self.rule,
+                "message": self.message}
+
+
+@dataclass
+class AllowEntry:
+    rule: str
+    path: str            # fnmatch glob over posix-relative paths
+    reason: str
+    line: Optional[int] = None
+    used: bool = field(default=False, compare=False)
+
+    def matches(self, f: Finding) -> bool:
+        if self.rule not in ("*", f.rule):
+            return False
+        if not fnmatch.fnmatch(f.file, self.path):
+            return False
+        return self.line is None or self.line == f.line
+
+
+class Suppressions:
+    """Combined per-line pragmas + file-level allowlist."""
+
+    def __init__(self, entries: Sequence[AllowEntry] = ()):
+        self.entries = list(entries)
+        self.bad_pragmas: List[Finding] = []
+
+    @staticmethod
+    def load_toml(path: str) -> List[AllowEntry]:
+        try:
+            import tomllib  # py >= 3.11
+        except ImportError:  # pragma: no cover - py3.10 container
+            import tomli as tomllib
+        with open(path, "rb") as fh:
+            doc = tomllib.load(fh)
+        entries = []
+        for raw in doc.get("allow", []):
+            if not raw.get("reason", "").strip():
+                raise SystemExit(
+                    f"{path}: allowlist entry {raw!r} has no reason — every "
+                    f"entry must carry a one-line justification"
+                )
+            entries.append(AllowEntry(
+                rule=raw.get("rule", "*"), path=raw.get("path", "*"),
+                reason=raw["reason"], line=raw.get("line"),
+            ))
+        return entries
+
+    def _pragma_allows(self, module_lines: List[str], f: Finding) -> bool:
+        """Same-line pragma, or a standalone comment line directly above."""
+        candidates = []
+        if 1 <= f.line <= len(module_lines):
+            candidates.append(module_lines[f.line - 1])
+            if f.line >= 2 and module_lines[f.line - 2].lstrip().startswith("#"):
+                candidates.append(module_lines[f.line - 2])
+        for text in candidates:
+            if not PRAGMA_ANY_RE.search(text):
+                continue
+            m = PRAGMA_RE.search(text)
+            if m and m.group("rule") == f.rule:
+                if m.group("why"):
+                    return True
+                self.bad_pragmas.append(Finding(
+                    file=f.file, line=f.line, rule="bad-pragma",
+                    message=(f"allow[{f.rule}] pragma without a "
+                             f"justification — add one after the colon"),
+                ))
+        return False
+
+    def filter(
+        self, findings: Sequence[Finding],
+        lines_by_file: Dict[str, List[str]],
+    ) -> tuple[List[Finding], List[Finding]]:
+        """-> (kept, suppressed). bad-pragma findings are appended to kept."""
+        kept: List[Finding] = []
+        suppressed: List[Finding] = []
+        for f in findings:
+            entry = next((e for e in self.entries if e.matches(f)), None)
+            if entry is not None:
+                entry.used = True
+                suppressed.append(f)
+                continue
+            if self._pragma_allows(lines_by_file.get(f.file, []), f):
+                suppressed.append(f)
+                continue
+            kept.append(f)
+        kept.extend(self.bad_pragmas)
+        return kept, suppressed

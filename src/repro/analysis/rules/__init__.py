@@ -1,0 +1,25 @@
+"""Rule registry. Each rule module defines ``RULE_ID``, ``DOC`` and
+``check(project) -> Iterable[Finding]``."""
+from __future__ import annotations
+
+from repro.analysis.rules import (
+    bench_timing,
+    dead_code,
+    host_sync,
+    pallas,
+    psum_axis,
+    retrace,
+    sharded_concat,
+)
+
+ALL_RULES = (
+    sharded_concat,
+    psum_axis,
+    host_sync,
+    retrace,
+    bench_timing,
+    pallas,
+    dead_code,
+)
+
+RULES_BY_ID = {r.RULE_ID: r for r in ALL_RULES}

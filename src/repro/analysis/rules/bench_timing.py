@@ -1,0 +1,82 @@
+"""bench-timing: perf_counter deltas around async JAX dispatch.
+
+JAX dispatch is asynchronous: a ``perf_counter`` pair around a jitted
+call without a ``block_until_ready`` between dispatch and the second
+read times the *enqueue*, not the work. Every benchmark number this repo
+gates CI on (warm path seconds, per-tile microbenches, scores/sec) is a
+perf_counter delta — a missing sync turns a real regression invisible
+and the gate into theater.
+
+Scope heuristic: a function (or a class, for ``__enter__``/``__exit__``
+timer pairs) in a jax-importing module that reads ``perf_counter`` at
+least twice without any ``block_until_ready`` in the same scope. Code
+whose timed section is genuinely host-synchronous (e.g. it ends in a
+``np.asarray`` of the result) carries an ``allow[bench-timing]`` pragma
+saying exactly that.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.context import ModuleInfo, Project
+from repro.analysis.findings import Finding
+
+RULE_ID = "bench-timing"
+DOC = ("perf_counter delta with no block_until_ready in scope — times "
+       "async dispatch, not the work")
+
+
+def _scope_calls(scope: ast.AST, mod: ModuleInfo):
+    perf, sync = [], 0
+    for node in ast.walk(scope):
+        if not isinstance(node, ast.Call):
+            continue
+        q = mod.qualname(node.func)
+        if q in ("time.perf_counter", "perf_counter", "time.monotonic",
+                 "time.time"):
+            perf.append(node.lineno)
+        elif (q in ("jax.block_until_ready", "block_until_ready")
+              or (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "block_until_ready")):
+            sync += 1
+    return perf, sync
+
+
+def _check_scope(mod: ModuleInfo, scope, name: str) -> Iterable[Finding]:
+    perf, sync = _scope_calls(scope, mod)
+    if len(perf) >= 2 and sync == 0:
+        yield Finding(
+            file=mod.path, line=sorted(perf)[-1], rule=RULE_ID,
+            message=(
+                f"{name} measures a perf_counter delta with no "
+                f"block_until_ready in scope — async dispatch makes this "
+                f"time the enqueue, not the JAX work; block on the output "
+                f"before stopping the clock (or allow[{RULE_ID}] stating "
+                f"why the timed section is host-synchronous)"),
+        )
+
+
+def check(project: Project) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for mod in project.modules:
+        if not mod.imports_jax:
+            continue
+        # classes first (timer context managers split the pair across
+        # methods); member functions of reported classes are skipped
+        reported_fns = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                perf, sync = _scope_calls(node, mod)
+                if len(perf) >= 2 and sync == 0:
+                    out.extend(_check_scope(mod, node,
+                                            f"class {node.name}"))
+                    for fn in ast.walk(node):
+                        if isinstance(fn, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef)):
+                            reported_fns.add(fn)
+        for fn in mod.functions():
+            if fn in reported_fns:
+                continue
+            out.extend(_check_scope(mod, fn, f"{fn.name}()"))
+    return out

@@ -1,0 +1,167 @@
+"""dead-code: inventory of modules unreachable from the GLM entry points.
+
+The seed shipped an LM-model zoo (``models/``, LM ``configs/``,
+``launch/train.py``, ...) that the d-GLMNET reproduction does not ride.
+Rather than deleting it (the probe examples and model-zoo tests still
+exercise it), this rule computes import-reachability from the GLM
+surface and reports everything outside it — and the findings live in the
+checked-in ``analysis-allowlist.toml``, each with a reason, so every
+future PR sees the boundary explicitly instead of rediscovering it.
+
+Roots are the *GLM* surface only: the public API (``repro.api``), the
+solver core (``repro.core``, minus the LM activation probe that lives
+there), serving (``repro.serve`` + ``launch.serve_glm``),
+checkpointing, the analyzer itself, and the GLM drivers of record
+(``benchmarks``, ``scripts.sanity_dglmnet``, ``scripts.hillclimb_glm``).
+The LM launchers (``launch.train``/``serve``/``dryrun``) and
+``scripts.sanity_models`` are deliberately NOT roots — they are the
+bridges that keep the seed zoo importable, which is exactly the boundary
+this rule exists to draw. Test modules are NOT roots either: "only a
+test imports it" is a finding, not reachability.
+
+Two edge subtleties:
+
+* only *import-time* imports (module/class level) are edges.
+  Function-local imports — including PEP 562 ``__getattr__`` lazy
+  re-exports, see ``repro/train/__init__.py`` and
+  ``repro/configs/__init__.py`` — are declared lazy boundaries: they say
+  "this dependency is not part of my import-time surface", which is the
+  surface this inventory draws;
+* importing ``pkg.sub`` executes ``pkg/__init__`` first, so every
+  submodule edge also adds its parent packages (matching Python).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Set
+
+from repro.analysis.context import ModuleInfo, Project
+from repro.analysis.findings import Finding
+
+RULE_ID = "dead-code"
+DOC = ("src modules unreachable from the GLM entry points — inventoried "
+       "in analysis-allowlist.toml, not deleted")
+
+ROOTS = (
+    "repro.api",
+    "repro.core",
+    "repro.serve",
+    "repro.launch.serve_glm",
+    "repro.checkpoint",
+    "repro.compat",
+    "repro.analysis",
+    "benchmarks",
+    "scripts.sanity_dglmnet",
+    "scripts.hillclimb_glm",
+)
+
+#: exact modules excluded from root prefixes — scaffolding that happens
+#: to live inside a root package
+NONROOTS = frozenset({"repro.core.probe"})
+
+
+def _module_name(path: str) -> str:
+    """posix repo-relative path -> dotted module name."""
+    p = path
+    if p.startswith("src/"):
+        p = p[len("src/"):]
+    if p.endswith("/__init__.py"):
+        p = p[: -len("/__init__.py")]
+    elif p.endswith(".py"):
+        p = p[:-3]
+    return p.replace("/", ".")
+
+
+def _import_time_nodes(tree: ast.Module) -> Iterable[ast.AST]:
+    """Nodes executed when the module is imported: module and class
+    bodies, but NOT function bodies — a function-local import (including
+    a PEP 562 ``__getattr__``) is a declared lazy boundary, not part of
+    the import-time surface this rule draws."""
+    stack: List[ast.AST] = [tree]
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _edges(mod: ModuleInfo, known: Set[str]) -> Set[str]:
+    """Outgoing import-time edges, restricted to in-project module names.
+    ``from pkg import name`` adds both ``pkg`` and ``pkg.name`` when the
+    latter is itself a module."""
+    name = _module_name(mod.path)
+    pkg_parts = name.split(".")
+    out: Set[str] = set()
+
+    def add(target: str) -> None:
+        while target:
+            if target in known:
+                out.add(target)
+                # a package import pulls in its __init__, which is the
+                # package node itself; submodule edges come from the
+                # __init__'s own imports
+                return
+            if "." not in target:
+                return
+            target = target.rsplit(".", 1)[0]
+
+    for node in _import_time_nodes(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                add(a.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base = pkg_parts[: len(pkg_parts) - node.level + (
+                    1 if mod.path.endswith("__init__.py") else 0)]
+                prefix = ".".join(base)
+                module = (f"{prefix}.{node.module}" if node.module
+                          else prefix)
+            else:
+                module = node.module or ""
+            if module:
+                add(module)
+                for a in node.names:
+                    if f"{module}.{a.name}" in known:
+                        out.add(f"{module}.{a.name}")
+    return out
+
+
+def check(project: Project) -> Iterable[Finding]:
+    names: Dict[str, ModuleInfo] = {
+        _module_name(m.path): m for m in project.modules
+    }
+    known = set(names)
+    graph = {n: _edges(m, known) for n, m in names.items()}
+    # package nodes implicitly import nothing extra, but importing any
+    # repro.x.y reaches repro.x (__init__ runs); add parent edges
+    for n in list(graph):
+        if "." in n:
+            graph[n].add(n.rsplit(".", 1)[0])
+
+    reached: Set[str] = set()
+    stack = [n for n in known
+             if n not in NONROOTS
+             and any(n == r or n.startswith(r + ".") for r in ROOTS)]
+    while stack:
+        n = stack.pop()
+        if n in reached:
+            continue
+        reached.add(n)
+        stack.extend(graph.get(n, ()))
+
+    out: List[Finding] = []
+    for n in sorted(known - reached):
+        mod = names[n]
+        if not mod.path.startswith("src/"):
+            continue          # only src modules are inventory candidates
+        out.append(Finding(
+            file=mod.path, line=1, rule=RULE_ID,
+            message=(
+                f"module {n} is unreachable from the GLM entry points "
+                f"({', '.join(ROOTS[:5])}, ...) — seed scaffolding? "
+                f"inventory it in analysis-allowlist.toml with a reason, "
+                f"or delete it"),
+        ))
+    return out

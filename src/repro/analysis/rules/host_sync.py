@@ -1,0 +1,93 @@
+"""host-sync-in-jit: device->host synchronization inside traced code.
+
+The engine's contract is ONE ``device_get`` per solve (core/engine.py);
+everything between warm start and fetch stays on device. A
+``float()``/``int()``/``bool()``/``.item()``/``np.asarray()`` on a traced
+value inside a ``@jit`` function or a ``lax.while_loop``/``scan`` body
+either fails at trace time on the path that runs — or worse, silently
+forces a concretization error miles from the cause. Static detection
+matters doubly on CPU, where ``jax.transfer_guard`` cannot catch these at
+runtime (no physical transfer happens; see ``repro.analysis.sanitize``).
+
+Shape arithmetic is exempt: ``int(x.shape[0])``, ``len(x)``, ``x.ndim``,
+``x.size`` and literals are static under trace.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.context import ModuleInfo, Project
+from repro.analysis.findings import Finding
+
+RULE_ID = "host-sync-in-jit"
+DOC = ("float()/int()/bool()/.item()/np.asarray on traced values inside "
+       "jit-compiled functions or lax control-flow bodies")
+
+_NP_SYNC = {"numpy.asarray", "numpy.array", "numpy.asanyarray",
+            "jax.device_get"}
+_CASTS = {"float", "int", "bool", "complex"}
+
+
+def _is_static_expr(node: ast.expr) -> bool:
+    """Exempt shape math: static under trace, no host sync involved."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Name) and node.func.id == "len":
+            return True
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr in (
+                "shape", "ndim", "size", "dtype"):
+            return True
+    return False
+
+
+def _check_fn(mod: ModuleInfo, fn: ast.FunctionDef) -> Iterable[Finding]:
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        # float(x) / int(x) / bool(x)
+        if (isinstance(node.func, ast.Name) and node.func.id in _CASTS
+                and node.args and not _is_static_expr(node.args[0])):
+            yield Finding(
+                file=mod.path, line=node.lineno, rule=RULE_ID,
+                message=(
+                    f"{node.func.id}() on a (possibly traced) value inside "
+                    f"jit-compiled {fn.name}() — forces a host sync or a "
+                    f"ConcretizationTypeError; keep the value on device or "
+                    f"hoist out of the traced region"),
+            )
+            continue
+        # .item()
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item" and not node.args):
+            yield Finding(
+                file=mod.path, line=node.lineno, rule=RULE_ID,
+                message=(
+                    f".item() inside jit-compiled {fn.name}() — a blocking "
+                    f"device->host transfer per call; fetch once after the "
+                    f"traced region instead"),
+            )
+            continue
+        # np.asarray / np.array / jax.device_get
+        q = mod.qualname(node.func)
+        if q in _NP_SYNC:
+            short = q.replace("numpy.", "np.")
+            yield Finding(
+                file=mod.path, line=node.lineno, rule=RULE_ID,
+                message=(
+                    f"{short}() inside jit-compiled {fn.name}() — "
+                    f"materializes the operand on host under trace; use "
+                    f"jnp ops or move outside the jitted function"),
+            )
+
+
+def check(project: Project) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for mod in project.modules:
+        if not mod.imports_jax:
+            continue
+        for fn in mod.jit_functions():
+            out.extend(_check_fn(mod, fn))
+    return out

@@ -1,0 +1,89 @@
+"""pallas-conventions: every kernel entry point keeps its CPU oracle.
+
+The repo's Pallas kernels are validated on CPU with ``interpret=True``
+against pure-jnp oracles in ``kernels/ref.py`` (the tests' allclose
+targets); native-TPU compilation is the production path. That parity
+only holds while two conventions hold:
+
+1. every public kernel entry point threads an ``interpret`` parameter
+   (so tests can force the emulator and TPU code can force native);
+2. every public ``*_pallas`` entry has a ``*_ref`` oracle counterpart in
+   the sibling ``ref.py``.
+
+The ROADMAP's native-TPU kernel campaign multiplies kernel entry points;
+this rule is what keeps each new one honest without a hand audit.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from repro.analysis.context import ModuleInfo, Project
+from repro.analysis.findings import Finding
+
+RULE_ID = "pallas-conventions"
+DOC = ("public pallas_call entry points must thread `interpret` and have "
+       "a *_ref oracle in the sibling ref.py")
+
+
+def _imports_pallas(mod: ModuleInfo) -> bool:
+    return any(m.startswith("jax.experimental.pallas")
+               for m in mod.imported_modules)
+
+
+def _calls_pallas_call(mod: ModuleInfo, fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            q = mod.qualname(node.func)
+            if q is not None and q.endswith("pallas_call"):
+                return True
+    return False
+
+
+def _has_interpret_param(fn: ast.FunctionDef) -> bool:
+    a = fn.args
+    return any(p.arg == "interpret"
+               for p in a.posonlyargs + a.args + a.kwonlyargs)
+
+
+def _ref_names(project: Project, mod: ModuleInfo) -> Optional[Set[str]]:
+    """Top-level def names in the sibling ref.py, or None if there is no
+    oracle module next to this kernel module."""
+    pkg_dir = mod.path.rsplit("/", 1)[0] if "/" in mod.path else ""
+    ref = project.by_path(f"{pkg_dir}/ref.py" if pkg_dir else "ref.py")
+    if ref is None or ref.path == mod.path:
+        return None
+    return {n.name for n in ref.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def check(project: Project) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for mod in project.modules:
+        if not _imports_pallas(mod):
+            continue
+        ref_names = _ref_names(project, mod)
+        for fn in mod.tree.body:
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if fn.name.startswith("_") or not _calls_pallas_call(mod, fn):
+                continue
+            if not _has_interpret_param(fn):
+                out.append(Finding(
+                    file=mod.path, line=fn.lineno, rule=RULE_ID,
+                    message=(
+                        f"pallas entry point {fn.name}() does not thread an "
+                        f"`interpret` parameter — CPU oracle validation and "
+                        f"native-TPU compilation need the caller to choose"),
+                ))
+            base = fn.name[:-7] if fn.name.endswith("_pallas") else fn.name
+            if ref_names is not None and f"{base}_ref" not in ref_names:
+                out.append(Finding(
+                    file=mod.path, line=fn.lineno, rule=RULE_ID,
+                    message=(
+                        f"pallas entry point {fn.name}() has no "
+                        f"{base}_ref oracle in the sibling ref.py — every "
+                        f"kernel keeps an interpret-parity target the "
+                        f"tests can allclose against"),
+                ))
+    return out

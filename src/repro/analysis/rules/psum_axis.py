@@ -1,0 +1,183 @@
+"""psum-axis: collective axis-name discipline + shard_map spec arity.
+
+Two invariant families this repo leans on across ~18 mesh files:
+
+1. Every collective (``lax.psum``/``pmean``/``pmax``/``pmin``/
+   ``axis_index``/``all_gather``) must name an axis that the surrounding
+   sharding constructs actually declare. A literal axis string that
+   appears in no ``P(...)`` spec, ``Mesh`` declaration or ``*_axis``
+   parameter default in the file is a typo'd collective: under
+   ``shard_map`` it fails at trace time *only* on the code path that runs,
+   so dead branches ship broken.
+
+   Axis expressions are considered declared when they are (a) a literal
+   found in the module's declared-axis set, (b) a parameter of an
+   enclosing function (axis injected by the caller — the repo's
+   ``model_axis="model"`` convention), or (c) bound by a ``for`` loop over
+   a parameter/value whose name ends in ``axes`` (the ``for ax in
+   data_axes`` idiom, mesh-derived by construction).
+
+2. A ``shard_map`` decoration with a literal ``in_specs`` tuple must have
+   exactly one spec per positional parameter of the decorated function —
+   an arity mismatch is a guaranteed trace error on the first call, but
+   factory-cached call sites can hide it until a cold path runs.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from repro.analysis.context import (
+    ModuleInfo,
+    Project,
+    positional_param_count,
+    spec_tuple_len,
+)
+from repro.analysis.findings import Finding
+
+RULE_ID = "psum-axis"
+DOC = ("collective axis names must be declared by surrounding "
+       "shard_map/Mesh/spec constructs; shard_map in_specs arity must "
+       "match the function signature")
+
+_COLLECTIVES = {
+    "jax.lax.psum", "jax.lax.pmean", "jax.lax.pmax", "jax.lax.pmin",
+    "jax.lax.axis_index", "jax.lax.all_gather", "jax.lax.ppermute",
+    "jax.lax.psum_scatter", "jax.lax.pshuffle", "jax.lax.all_to_all",
+}
+
+
+def _axis_arg(q: str, node: ast.Call) -> Optional[ast.expr]:
+    for kw in node.keywords:
+        if kw.arg in ("axis_name", "axis"):
+            return kw.value
+    # positional conventions: axis_index(axis); psum/pmax/...(x, axis);
+    # all_gather(x, axis, ...)
+    idx = 0 if q.endswith("axis_index") else 1
+    return node.args[idx] if len(node.args) > idx else None
+
+
+def _enclosing_functions(tree: ast.Module) -> dict:
+    """node -> chain of enclosing FunctionDefs (outermost first)."""
+    chains = {}
+
+    def visit(node, chain):
+        for child in ast.iter_child_nodes(node):
+            new_chain = chain
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                new_chain = chain + [child]
+            chains[child] = new_chain
+            visit(child, new_chain)
+
+    chains[tree] = []
+    visit(tree, [])
+    return chains
+
+
+def _param_names(fn: ast.FunctionDef) -> Set[str]:
+    a = fn.args
+    names = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    return names
+
+
+def _loop_axis_names(fns: List[ast.FunctionDef]) -> Set[str]:
+    """Names bound by ``for ax in <something named *axes*>`` in the
+    enclosing function chain (the mesh-derived data-axes idiom)."""
+    out: Set[str] = set()
+    for fn in fns:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.For):
+                continue
+            src = node.iter
+            name = None
+            if isinstance(src, ast.Name):
+                name = src.id
+            elif isinstance(src, ast.Call) and isinstance(src.func, ast.Name):
+                name = src.func.id
+            elif isinstance(src, ast.Call) and isinstance(
+                    src.func, ast.Attribute):
+                name = src.func.attr
+            if name and ("axes" in name or name == "_data_axes"):
+                for tgt in ast.walk(node.target):
+                    if isinstance(tgt, ast.Name):
+                        out.add(tgt.id)
+    return out
+
+
+def _check_collectives(mod: ModuleInfo) -> Iterable[Finding]:
+    declared = mod.declared_axis_names()
+    chains = _enclosing_functions(mod.tree)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        q = mod.qualname(node.func)
+        if q not in _COLLECTIVES:
+            continue
+        axis = _axis_arg(q, node)
+        if axis is None:
+            continue
+        fns = chains.get(node, [])
+        short = q.rsplit(".", 1)[-1]
+        ok = False
+        if isinstance(axis, ast.Constant) and isinstance(axis.value, str):
+            ok = axis.value in declared
+            what = f'literal "{axis.value}"'
+        elif isinstance(axis, ast.Name):
+            params = set().union(*(_param_names(f) for f in fns)) if fns \
+                else set()
+            ok = (axis.id in params or axis.id in _loop_axis_names(fns)
+                  or axis.id in declared)
+            what = f"name {axis.id!r}"
+        elif isinstance(axis, (ast.Tuple, ast.List)):
+            elems_ok = []
+            for e in axis.elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    elems_ok.append(e.value in declared)
+                else:
+                    elems_ok.append(True)   # dynamic element: trust
+            ok = all(elems_ok)
+            what = "tuple of axis names"
+        else:
+            ok = True                        # dynamic expression: trust
+            what = "axis expression"
+        if not ok:
+            yield Finding(
+                file=mod.path, line=node.lineno, rule=RULE_ID,
+                message=(
+                    f"{short} over {what}, which no P(...) spec, Mesh "
+                    f"declaration or *_axis parameter default in this file "
+                    f"declares — typo'd collectives only fail on the traced "
+                    f"path that runs"),
+            )
+
+
+def _check_arity(mod: ModuleInfo) -> Iterable[Finding]:
+    for fn, deco in mod.shard_map_decorations():
+        if deco.in_specs is None:
+            continue
+        n_specs = spec_tuple_len(deco.in_specs)
+        if n_specs is None:
+            continue
+        n_params = positional_param_count(fn)
+        if n_specs != n_params:
+            yield Finding(
+                file=mod.path, line=deco.line, rule=RULE_ID,
+                message=(
+                    f"shard_map in_specs has {n_specs} spec(s) but "
+                    f"{fn.name}() takes {n_params} positional parameter(s) "
+                    f"— every operand needs exactly one spec"),
+            )
+
+
+def check(project: Project) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for mod in project.modules:
+        if not mod.imports_jax:
+            continue
+        out.extend(_check_collectives(mod))
+        out.extend(_check_arity(mod))
+    return out

@@ -1,0 +1,154 @@
+"""retrace-hazard: compilation-cache poison.
+
+The warm-started path's whole perf model assumes a handful of
+compilations serve all L lambdas (capacity-bucketed shapes, lam as a
+traced operand). Two accidents silently break that:
+
+1. A jitted function keyed on Python values that should be static —
+   dict/list/tuple defaults (unhashable: TypeError at best, retrace per
+   call at worst) or int/bool scalar defaults used as structural knobs
+   without ``static_argnames``. Every call with a new value is a fresh
+   trace.
+
+2. An *unbounded* ``functools.lru_cache`` in a JAX module. Keys and
+   values live forever: a cache over meshes pins every mesh (and every
+   compiled program built from it) for the life of the process, and a
+   cached function that captures or returns device arrays pins device
+   memory that looks like a leak (the ``serve/scoring.py`` path-margins
+   cache was the live example). Bound it, scope it to the owning object,
+   or justify why process-lifetime growth is really bounded.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from repro.analysis.context import ModuleInfo, Project
+from repro.analysis.findings import Finding
+
+RULE_ID = "retrace-hazard"
+DOC = ("jitted defs with non-static Python-structure/scalar defaults; "
+       "unbounded lru_cache in JAX modules")
+
+
+def _jit_decoration(mod: ModuleInfo, fn: ast.FunctionDef):
+    """The jit decorator Call (or marker) if fn is jit-decorated."""
+    for dec in fn.decorator_list:
+        q = mod.qualname(dec)
+        if q in ("jax.jit", "jit"):
+            return dec
+        if isinstance(dec, ast.Call):
+            qc = mod.qualname(dec.func)
+            if qc in ("jax.jit", "jit"):
+                return dec
+            if qc in ("functools.partial", "partial") and dec.args and \
+                    mod.qualname(dec.args[0]) in ("jax.jit", "jit"):
+                return dec
+    return None
+
+
+def _static_argnames(dec) -> Set[str]:
+    if not isinstance(dec, ast.Call):
+        return set()
+    for kw in dec.keywords:
+        if kw.arg == "static_argnames":
+            return {c.value for c in ast.walk(kw.value)
+                    if isinstance(c, ast.Constant)
+                    and isinstance(c.value, str)}
+    return set()
+
+
+def _param_defaults(fn: ast.FunctionDef):
+    a = fn.args
+    pos = a.posonlyargs + a.args
+    for p, d in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        yield p.arg, d
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None:
+            yield p.arg, d
+
+
+def _check_jit_defaults(mod: ModuleInfo, fn: ast.FunctionDef,
+                        dec) -> Iterable[Finding]:
+    static = _static_argnames(dec)
+    for name, default in _param_defaults(fn):
+        if name in static:
+            continue
+        if isinstance(default, (ast.Dict, ast.List, ast.Set, ast.Tuple)):
+            yield Finding(
+                file=mod.path, line=fn.lineno, rule=RULE_ID,
+                message=(
+                    f"jitted {fn.name}() takes Python-structure default "
+                    f"for {name!r} not in static_argnames — unhashable "
+                    f"under the jit cache (or a retrace per distinct "
+                    f"value); mark static or pass arrays"),
+            )
+        elif (isinstance(default, ast.Constant)
+              and isinstance(default.value, (int, bool))
+              and not isinstance(default.value, float)):
+            yield Finding(
+                file=mod.path, line=fn.lineno, rule=RULE_ID,
+                message=(
+                    f"jitted {fn.name}() takes Python scalar default "
+                    f"{name}={default.value!r} absent from static_argnames "
+                    f"— a structural knob traced as an operand retraces on "
+                    f"first use in shape math; declare it static"),
+            )
+
+
+def _lru_maxsize(dec: ast.AST) -> Optional[str]:
+    """'unbounded' if @lru_cache pins forever, None if bounded/not lru."""
+    if isinstance(dec, ast.Name) and dec.id == "lru_cache":
+        return "bare @lru_cache"
+    if isinstance(dec, ast.Attribute) and dec.attr == "lru_cache":
+        return "bare @lru_cache"
+    if isinstance(dec, ast.Call):
+        base = dec.func
+        name_ok = (isinstance(base, ast.Name) and base.id == "lru_cache") \
+            or (isinstance(base, ast.Attribute) and base.attr == "lru_cache")
+        if not name_ok:
+            return None
+        if not dec.args and not dec.keywords:
+            return "@lru_cache()"
+        for kw in dec.keywords:
+            if kw.arg == "maxsize":
+                if isinstance(kw.value, ast.Constant) and \
+                        kw.value.value is None:
+                    return "maxsize=None"
+                return None
+        if dec.args:
+            first = dec.args[0]
+            if isinstance(first, ast.Constant) and first.value is None:
+                return "maxsize=None"
+        return None
+    return None
+
+
+def _check_lru(mod: ModuleInfo) -> Iterable[Finding]:
+    for fn in mod.functions():
+        for dec in fn.decorator_list:
+            how = _lru_maxsize(dec)
+            if how is None:
+                continue
+            yield Finding(
+                file=mod.path, line=fn.lineno, rule=RULE_ID,
+                message=(
+                    f"unbounded lru_cache ({how}) on {fn.name}() in a JAX "
+                    f"module — keys/values (meshes, compiled programs, "
+                    f"device arrays) are pinned for the process lifetime; "
+                    f"bound it, scope it to the owning object, or "
+                    f"allow[{RULE_ID}] with why growth is bounded"),
+            )
+
+
+def check(project: Project) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for mod in project.modules:
+        if not mod.imports_jax:
+            continue
+        for fn in mod.functions():
+            dec = _jit_decoration(mod, fn)
+            if dec is not None:
+                out.extend(_check_jit_defaults(mod, fn, dec))
+        out.extend(_check_lru(mod))
+    return out

@@ -1,0 +1,57 @@
+"""sharded-concat: concatenation of possibly-mesh-sharded values.
+
+``jnp.concatenate`` of P(model)-sharded pieces of unequal length
+miscompiles on the JAX pinned in this environment (wrong-extent
+dynamic-update window — garbage tails; see ``sharding/collect.py``). The
+repo's guard is architectural: the replicate-then-concat dance lives in
+exactly ONE place, ``repro.sharding.collect``, and mesh-aware call sites
+must go through it. This rule enforces the single-home invariant: any
+direct ``jnp.concatenate/stack/hstack/vstack/column_stack/append`` in a
+module that imports sharding machinery is a finding.
+
+Modules that never touch a mesh (pure-local math, host-side assembly) are
+exempt — a concat there cannot see a sharded operand.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.context import Project
+from repro.analysis.findings import Finding
+
+RULE_ID = "sharded-concat"
+DOC = ("direct jnp concat/stack in a mesh-aware module — route through "
+       "sharding.collect.concat_replicated (single home of the "
+       "P(model)-concat miscompile guard)")
+
+_BANNED = {
+    "jax.numpy.concatenate", "jax.numpy.stack", "jax.numpy.hstack",
+    "jax.numpy.vstack", "jax.numpy.column_stack", "jax.numpy.append",
+    "jax.numpy.concat",
+}
+
+#: the one module allowed to concatenate mesh values
+_HOME = "sharding/collect.py"
+
+
+def check(project: Project) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for mod in project.modules:
+        if mod.path.endswith(_HOME) or not mod.mesh_context:
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            q = mod.qualname(node.func)
+            if q in _BANNED:
+                short = q.replace("jax.numpy.", "jnp.")
+                out.append(Finding(
+                    file=mod.path, line=node.lineno, rule=RULE_ID,
+                    message=(
+                        f"{short} in a mesh-aware module — sharded pieces "
+                        f"miscompile; use sharding.collect.concat_replicated "
+                        f"(or allow[{RULE_ID}] with why the operands can "
+                        f"never be sharded)"),
+                ))
+    return out

@@ -1,0 +1,163 @@
+"""Walk files, run rules, apply suppressions, render findings.
+
+``python -m repro.analysis src tests benchmarks`` is the CI lint lane;
+exit status 0 means every finding is either fixed or explicitly
+allowlisted with a justification (per-line ``# allow[rule-id]: why``
+pragmas or ``analysis-allowlist.toml`` entries).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.context import ModuleInfo, Project
+from repro.analysis.findings import AllowEntry, Finding, Suppressions
+
+#: paths never scanned: the golden fixtures *intentionally* trip rules
+DEFAULT_EXCLUDES = ("tests/fixtures/analysis",)
+
+DEFAULT_ALLOWLIST = "analysis-allowlist.toml"
+
+
+@dataclass
+class Report:
+    findings: List[Finding]
+    suppressed: List[Finding]
+    n_files: int
+    parse_errors: List[Finding] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings and not self.parse_errors
+
+    def as_json(self) -> dict:
+        return {
+            "version": 1,
+            "ok": self.ok,
+            "files": self.n_files,
+            "findings": [f.as_json()
+                         for f in self.findings + self.parse_errors],
+            "suppressed": [f.as_json() for f in self.suppressed],
+        }
+
+
+def _walk_py(paths: Sequence[str], root: str,
+             excludes: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        ap = os.path.join(root, p) if not os.path.isabs(p) else p
+        if os.path.isfile(ap) and ap.endswith(".py"):
+            out.append(ap)
+            continue
+        for dirpath, dirnames, filenames in os.walk(ap):
+            dirnames[:] = [d for d in sorted(dirnames)
+                           if d != "__pycache__" and not d.startswith(".")]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    out.append(os.path.join(dirpath, fn))
+    rels = []
+    for ap in out:
+        rel = os.path.relpath(ap, root).replace(os.sep, "/")
+        if any(rel.startswith(e) for e in excludes):
+            continue
+        rels.append(rel)
+    return sorted(set(rels))
+
+
+def load_project(paths: Sequence[str], *, root: Optional[str] = None,
+                 excludes: Sequence[str] = DEFAULT_EXCLUDES,
+                 ) -> tuple[Project, List[Finding]]:
+    root = root or os.getcwd()
+    modules: List[ModuleInfo] = []
+    errors: List[Finding] = []
+    for rel in _walk_py(paths, root, excludes):
+        with open(os.path.join(root, rel), "r", encoding="utf-8") as fh:
+            source = fh.read()
+        try:
+            modules.append(ModuleInfo.parse(rel, source))
+        except SyntaxError as e:
+            errors.append(Finding(
+                file=rel, line=e.lineno or 1, rule="parse-error",
+                message=f"file does not parse: {e.msg}",
+            ))
+    return Project(root=root, modules=modules), errors
+
+
+def run_analysis(paths: Sequence[str], *, root: Optional[str] = None,
+                 rules: Optional[Sequence[str]] = None,
+                 allowlist: Optional[str] = DEFAULT_ALLOWLIST,
+                 excludes: Sequence[str] = DEFAULT_EXCLUDES) -> Report:
+    from repro.analysis.rules import ALL_RULES, RULES_BY_ID
+
+    root = root or os.getcwd()
+    project, parse_errors = load_project(paths, root=root, excludes=excludes)
+
+    selected = ALL_RULES if rules is None else [
+        RULES_BY_ID[r] for r in rules
+    ]
+    findings: List[Finding] = []
+    for rule in selected:
+        findings.extend(rule.check(project))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+
+    entries: List[AllowEntry] = []
+    if allowlist:
+        al_path = os.path.join(root, allowlist)
+        if os.path.exists(al_path):
+            entries = Suppressions.load_toml(al_path)
+    supp = Suppressions(entries)
+    lines_by_file: Dict[str, List[str]] = {
+        m.path: m.lines for m in project.modules
+    }
+    kept, suppressed = supp.filter(findings, lines_by_file)
+    return Report(findings=kept, suppressed=suppressed,
+                  n_files=len(project.modules), parse_errors=parse_errors)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    from repro.analysis.rules import ALL_RULES
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=("invariant lint pass: device-resident / mesh-correct "
+                     "contract rules for this repo"),
+    )
+    ap.add_argument("paths", nargs="*", default=["src", "tests", "benchmarks"],
+                    help="files or directories to scan (default: src tests "
+                         "benchmarks)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--allowlist", default=DEFAULT_ALLOWLIST,
+                    help="TOML allowlist path (default: "
+                         f"{DEFAULT_ALLOWLIST}; pass '' to disable)")
+    ap.add_argument("--root", default=None,
+                    help="repo root paths are relative to (default: cwd)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in ALL_RULES:
+            print(f"{r.RULE_ID:20s} {r.DOC}")
+        return 0
+
+    report = run_analysis(
+        args.paths or ["src", "tests", "benchmarks"],
+        root=args.root,
+        rules=args.rules.split(",") if args.rules else None,
+        allowlist=args.allowlist or None,
+    )
+    if args.format == "json":
+        print(json.dumps(report.as_json(), indent=2))
+    else:
+        for f in report.findings + report.parse_errors:
+            print(f.render())
+        print(f"# scanned {report.n_files} files: "
+              f"{len(report.findings) + len(report.parse_errors)} finding(s), "
+              f"{len(report.suppressed)} suppressed")
+    return 0 if report.ok else 1

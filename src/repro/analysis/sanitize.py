@@ -1,0 +1,197 @@
+"""Runtime sanitizers for the device-resident contract.
+
+Two context managers back the static rules with teeth at test time:
+
+``transfer_sanitizer``
+    Pins the engine's one-transfer-per-solve contract. On CPU,
+    ``jax.transfer_guard`` is a no-op (host and "device" share memory, so
+    JAX never records a transfer), so this patches the implicit
+    device→host conversion points directly:
+
+    * ``ArrayImpl._value`` — the materialization property behind
+      ``float()``, ``int()``, ``bool()``, ``.tolist()``, ``str()`` and
+      ``jax.device_get``;
+    * ``ArrayImpl.item()``.
+
+    The ONE sanctioned fetch door is ``repro.core.engine.device_get``
+    (the module-level indirection the engine's ``fetch`` epilogue calls);
+    it is wrapped to count fetches against ``max_fetches``. Anything else
+    that drags a device value to host inside the context raises
+    :class:`HostTransferError` at the offending line.
+
+    Known gap: ``np.asarray(x)`` reaches the buffer through the C++
+    ``__array__`` slot and cannot be intercepted from Python — the static
+    ``host-sync-in-jit`` rule is the cover for that spelling.
+
+    On real accelerators the context *additionally* arms
+    ``jax.transfer_guard_device_to_host("disallow")``, so explicit-copy
+    paths that bypass ``_value`` still fault.
+
+``compile_sanitizer``
+    A compile-count budget: arms ``jax_log_compiles`` and counts
+    "Finished XLA compilation" records. ``compile_sanitizer(0)`` around
+    the warm leg of a warm-started regularization path is the
+    zero-retrace certificate — if any per-lambda solve retraces, the
+    context raises :class:`CompileBudgetExceeded` naming the recompiled
+    computations.
+"""
+from __future__ import annotations
+
+import logging
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import List
+
+
+class HostTransferError(RuntimeError):
+    """A device value was materialized on host outside the sanctioned
+    ``repro.core.engine.device_get`` door."""
+
+
+class FetchBudgetExceeded(HostTransferError):
+    """More sanctioned fetches than the contract allows."""
+
+
+class CompileBudgetExceeded(RuntimeError):
+    """More XLA compilations than the budget allows."""
+
+
+@dataclass
+class TransferStats:
+    """What the transfer sanitizer saw: sanctioned fetches only (anything
+    unsanctioned raised instead of being recorded)."""
+
+    max_fetches: int
+    fetches: int = 0
+
+
+@dataclass
+class CompileStats:
+    max_compiles: int
+    compiles: List[str] = field(default_factory=list)
+
+    @property
+    def count(self) -> int:
+        return len(self.compiles)
+
+
+@contextmanager
+def transfer_sanitizer(max_fetches: int = 1):
+    """Forbid device→host materialization except through
+    ``repro.core.engine.device_get``, and allow at most ``max_fetches``
+    of those. Yields a :class:`TransferStats`."""
+    import jax
+    from jax._src import array as _array_mod
+
+    from repro.core import engine as _engine
+
+    stats = TransferStats(max_fetches=max_fetches)
+    # Re-entrancy latch: engine.device_get flips it while delegating to
+    # the real jax.device_get, whose implementation goes through the
+    # patched ``_value`` property.
+    state = {"sanctioned": False}
+
+    orig_value = _array_mod.ArrayImpl._value
+    orig_item = _array_mod.ArrayImpl.item
+    orig_fetch = _engine.device_get
+
+    def guarded_value(self):
+        if not state["sanctioned"]:
+            raise HostTransferError(
+                "device value materialized on host (float()/int()/bool()/"
+                "tolist()/device_get) outside repro.core.engine.device_get "
+                "— the engine contract is one sanctioned fetch per solve"
+            )
+        if isinstance(orig_value, property):
+            return orig_value.fget(self)
+        return orig_value.__get__(self)()
+
+    def guarded_item(self, *a, **k):
+        if not state["sanctioned"]:
+            raise HostTransferError(
+                ".item() on a device value outside "
+                "repro.core.engine.device_get"
+            )
+        return orig_item(self, *a, **k)
+
+    def sanctioned_fetch(tree):
+        stats.fetches += 1
+        if stats.fetches > stats.max_fetches:
+            raise FetchBudgetExceeded(
+                f"sanctioned fetch #{stats.fetches} exceeds the budget of "
+                f"{stats.max_fetches} — the engine contract is "
+                f"{stats.max_fetches} host transfer(s) in this scope"
+            )
+        state["sanctioned"] = True
+        try:
+            return jax.device_get(tree)
+        finally:
+            state["sanctioned"] = False
+
+    _array_mod.ArrayImpl._value = property(guarded_value)
+    _array_mod.ArrayImpl.item = guarded_item
+    _engine.device_get = sanctioned_fetch
+    try:
+        if jax.default_backend() != "cpu":  # pragma: no cover - CPU CI
+            with jax.transfer_guard_device_to_host("disallow"):
+                yield stats
+        else:
+            yield stats
+    finally:
+        _array_mod.ArrayImpl._value = orig_value
+        _array_mod.ArrayImpl.item = orig_item
+        _engine.device_get = orig_fetch
+
+
+class _CompileCounter(logging.Handler):
+    _FINISHED = "Finished XLA compilation of "
+
+    def __init__(self, stats: CompileStats):
+        super().__init__(level=logging.DEBUG)
+        self.stats = stats
+
+    def emit(self, record: logging.LogRecord) -> None:
+        msg = record.getMessage()
+        if self._FINISHED in msg:
+            name = msg.split(self._FINISHED, 1)[1].split(" in ")[0]
+            self.stats.compiles.append(name)
+
+
+#: loggers that announce XLA compilations (jit and pjit/shard_map paths)
+_COMPILE_LOGGERS = ("jax._src.dispatch", "jax._src.interpreters.pxla")
+
+
+@contextmanager
+def compile_sanitizer(max_compiles: int = 0):
+    """Budget the number of XLA compilations inside the context; 0 is the
+    zero-retrace certificate for warm code. Raises
+    :class:`CompileBudgetExceeded` on exit, naming each compiled
+    computation. Yields a :class:`CompileStats`."""
+    import jax
+
+    stats = CompileStats(max_compiles=max_compiles)
+    handler = _CompileCounter(stats)
+
+    prev_flag = jax.config.jax_log_compiles
+    jax.config.update("jax_log_compiles", True)
+    loggers = [logging.getLogger(n) for n in _COMPILE_LOGGERS]
+    prev_levels = [lg.level for lg in loggers]
+    prev_propagate = [lg.propagate for lg in loggers]
+    for lg in loggers:
+        lg.addHandler(handler)
+        lg.propagate = False        # count quietly; restore on exit
+        if lg.level > logging.WARNING or lg.level == logging.NOTSET:
+            lg.setLevel(logging.WARNING)
+    try:
+        yield stats
+    finally:
+        for lg, lv, pr in zip(loggers, prev_levels, prev_propagate):
+            lg.removeHandler(handler)
+            lg.setLevel(lv)
+            lg.propagate = pr
+        jax.config.update("jax_log_compiles", prev_flag)
+    if stats.count > max_compiles:
+        raise CompileBudgetExceeded(
+            f"{stats.count} XLA compilation(s) inside a budget of "
+            f"{max_compiles}: {', '.join(stats.compiles)}"
+        )

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.screening import gather_columns, scatter_columns
+from repro.sharding.collect import concat_replicated
 from repro.data.byfeature import (
     ByFeature,
     SlabBuckets,
@@ -175,6 +176,7 @@ class SlabDesign:
                       n_loc=self.n_loc)
             for s in range(self.dp)
         ]
+        # allow[sharded-concat]: single-process slab path — per-shard pieces are local unsharded arrays; the mesh path routes through core.distributed's shard_map
         return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
 
     def correlation(self, v):
@@ -235,6 +237,7 @@ class SlabDesign:
                               self.n_loc)
                 for s in range(self.dp)
             ]
+            # allow[sharded-concat]: single-process densify oracle — local per-shard dense blocks, never mesh-sharded values
             dense = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
             object.__setattr__(self, "_dense_cache", dense)
         return dense
@@ -542,7 +545,6 @@ class ShardedDesign:
         if self.layout == "dense":
             return self.inner.correlation(v)
         from repro.core.screening import make_sparse_corr
-        from repro.sharding.collect import concat_replicated
 
         st = self._mesh_state()
         tile = st.cap_tile // self.mdim
@@ -578,7 +580,6 @@ class ShardedDesign:
         when ``LogisticL1.opts.tile != design.tile``.
         """
         from repro.core.screening import make_sparse_screen
-        from repro.sharding.collect import concat_replicated
 
         st = self._mesh_state(tile)
         screen = make_sparse_screen(self.mesh, st.n_loc,

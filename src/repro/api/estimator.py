@@ -62,6 +62,7 @@ from repro.api.types import (  # noqa: F401  (re-export: path output)
 )
 from repro.core.screening import _nll_residual
 from repro.data.byfeature import k_class, scatter_features
+from repro.sharding.collect import replicate
 
 
 def lambda_max_design(design: Design, y):
@@ -118,7 +119,7 @@ def _screened_point(p_cap, lam, lam_prev, beta, m, *, grad_abs,
     cap = 0
     deferred = 0
     for rounds in range(1, max_kkt_rounds + 1):
-        count = int(mask.sum())
+        count = int(engine.device_get(mask.sum()))
         if count == 0:
             # empty working set: beta stays 0 (strong rule + no support)
             beta_new, m_new = beta, m
@@ -128,7 +129,7 @@ def _screened_point(p_cap, lam, lam_prev, beta, m, *, grad_abs,
             res, beta_new, m_new = restricted_solve(mask, cap, beta)
         g_abs = grad_abs(m_new)
         viol = kkt_violations(g_abs, lam, mask, tol=kkt_tol)
-        n_viol = int(viol.sum())
+        n_viol = int(engine.device_get(viol.sum()))
         if n_viol == 0:
             break
         if violation_budget is not None and rounds < max_kkt_rounds - 1:
@@ -136,7 +137,7 @@ def _screened_point(p_cap, lam, lam_prev, beta, m, *, grad_abs,
             admitted = budgeted_admission(viol, g_abs, budget)
             # ties at the cutoff may admit more than the budget — count
             # what actually stayed out, not the nominal overflow
-            deferred += n_viol - int(admitted.sum())
+            deferred += n_viol - int(engine.device_get(admitted.sum()))
         else:
             admitted = viol                       # safety valve: admit all
         mask = jnp.logical_or(mask, admitted)     # violators re-enter
@@ -147,8 +148,8 @@ def _screened_point(p_cap, lam, lam_prev, beta, m, *, grad_abs,
             f"at lambda={lam} (last violation count > 0)"
         )
 
-    info = {"active": int(mask.sum()), "capacity": cap, "kkt_rounds": rounds,
-            "deferred": deferred}
+    info = {"active": int(engine.device_get(mask.sum())), "capacity": cap,
+            "kkt_rounds": rounds, "deferred": deferred}
     return res, beta_new, m_new, info, mask
 
 
@@ -391,8 +392,6 @@ class LogisticL1:
             raise ValueError("not fitted and no beta= given")
         scores = design.margins(beta)
         if isinstance(design, ShardedDesign):
-            from repro.sharding.collect import replicate
-
             scores = replicate(scores, design.mesh)
         return scores
 
@@ -516,8 +515,8 @@ class LogisticL1:
                     if front_packed:
                         # slab-capacity class of this working set: heavy
                         # features only make a solve pay for K they carry
-                        k_need = int(jnp.max(
-                            jnp.where(mask_work, st.k_arr, 0)))
+                        k_need = int(engine.device_get(jnp.max(
+                            jnp.where(mask_work, st.k_arr, 0))))
                         k_cap = k_class(k_need, st.k_max)
                     else:
                         k_cap = st.k_max
@@ -551,9 +550,9 @@ class LogisticL1:
             # at beta = 0 the NLL gradient is -0.5 * X^T y, so the sparse
             # screen pass at zero margins *is* lambda_max — same program
             # every later screen reuses, no dense X needed
-            lmax = float(jnp.max(grad_abs(m)))
+            lmax = float(engine.device_get(jnp.max(grad_abs(m))))
         else:
-            lmax = float(lambda_max_design(design, y))
+            lmax = float(engine.device_get(lambda_max_design(design, y)))
         lams = _lambda_grid(lmax, path_len, extra_lams)
         beta = jnp.zeros(p_cap, jnp.float32)
 
@@ -586,9 +585,12 @@ class LogisticL1:
                 info = {}
             lam_prev = lam
             beta_out = to_output(beta) if to_output is not None else beta
-            nnz = int(jnp.sum(jnp.abs(beta_out) > 0))
-            f = float(res.f) if res.n_iters else \
-                float(objective(m, y, beta, lam))
+            # one audited fetch for the per-point telemetry (engine's
+            # device_get door — countable under the transfer sanitizer)
+            f_dev = res.f if res.n_iters else objective(m, y, beta, lam)
+            nnz_h, f_h = engine.device_get(
+                (jnp.sum(jnp.abs(beta_out) > 0), f_dev))
+            nnz, f = int(nnz_h), float(f_h)
             metrics = eval_fn(beta_out) if eval_fn else {}
             points.append(
                 PathPoint(lam=lam, nnz=nnz, f=f, n_iters=res.n_iters,
@@ -629,8 +631,6 @@ def make_design_eval(test_data, y_test, *, mesh=None,
 
         scores = design.margins(beta)
         if isinstance(design, ShardedDesign):
-            from repro.sharding.collect import replicate
-
             scores = replicate(scores, design.mesh)
         return metrics_from_scores(np.asarray(scores), y_host)
 

@@ -2,6 +2,13 @@
 
 Arch ids match the assignment table verbatim (dashes/dots); module names are
 the pythonized versions.
+
+The LM model-zoo configs load lazily (PEP 562): the GLM path imports
+``GLMConfig``/``GLM_CONFIGS`` from here without executing ten LM config
+modules, and the dead-code inventory rule
+(``repro.analysis.rules.dead_code``) treats the ``__getattr__`` boundary
+as "not part of the import-time surface". ``from repro.configs import
+MODEL_CONFIGS`` still works — the zoo materializes on first access.
 """
 from __future__ import annotations
 
@@ -16,47 +23,61 @@ from repro.configs.base import (  # noqa: F401
     MoEConfig,
     SSMConfig,
 )
+from repro.configs.glm import GLM_CONFIGS
 from repro.configs.shapes import SHAPES, InputShape, get_shape  # noqa: F401
 
-from repro.configs.qwen2_5_3b import CONFIG as _qwen2_5_3b
-from repro.configs.mamba2_2p7b import CONFIG as _mamba2_2p7b
-from repro.configs.zamba2_7b import CONFIG as _zamba2_7b
-from repro.configs.qwen1_5_4b import CONFIG as _qwen1_5_4b
-from repro.configs.internlm2_1p8b import CONFIG as _internlm2_1p8b
-from repro.configs.tinyllama_1p1b import CONFIG as _tinyllama_1p1b
-from repro.configs.deepseek_v3_671b import CONFIG as _deepseek_v3_671b
-from repro.configs.qwen2_vl_72b import CONFIG as _qwen2_vl_72b
-from repro.configs.llama4_scout_17b_a16e import CONFIG as _llama4_scout
-from repro.configs.seamless_m4t_medium import CONFIG as _seamless_m4t
-from repro.configs.glm import GLM_CONFIGS
-
-MODEL_CONFIGS = {
-    c.name: c
-    for c in (
-        _qwen2_5_3b,
-        _mamba2_2p7b,
-        _zamba2_7b,
-        _qwen1_5_4b,
-        _internlm2_1p8b,
-        _tinyllama_1p1b,
-        _deepseek_v3_671b,
-        _qwen2_vl_72b,
-        _llama4_scout,
-        _seamless_m4t,
-    )
-}
-
-ALL_CONFIGS = {**MODEL_CONFIGS, **GLM_CONFIGS}
-
-ARCH_IDS = tuple(MODEL_CONFIGS)
 GLM_IDS = tuple(GLM_CONFIGS)
+
+_LM_MODULES = (
+    "qwen2_5_3b",
+    "mamba2_2p7b",
+    "zamba2_7b",
+    "qwen1_5_4b",
+    "internlm2_1p8b",
+    "tinyllama_1p1b",
+    "deepseek_v3_671b",
+    "qwen2_vl_72b",
+    "llama4_scout_17b_a16e",
+    "seamless_m4t_medium",
+)
+
+
+def _model_configs() -> dict:
+    cached = globals().get("MODEL_CONFIGS")
+    if cached is None:
+        import importlib
+
+        cached = {}
+        for m in _LM_MODULES:
+            c = importlib.import_module(f"repro.configs.{m}").CONFIG
+            cached[c.name] = c
+        globals()["MODEL_CONFIGS"] = cached
+        globals()["ALL_CONFIGS"] = {**cached, **GLM_CONFIGS}
+        globals()["ARCH_IDS"] = tuple(cached)
+    return cached
+
+
+def __getattr__(name: str):
+    if name in ("MODEL_CONFIGS", "ALL_CONFIGS", "ARCH_IDS"):
+        _model_configs()
+        return globals()[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals())
+                  | {"MODEL_CONFIGS", "ALL_CONFIGS", "ARCH_IDS"})
 
 
 def get_config(name: str):
     """Look up any registered config (model arch or GLM workload)."""
+    if name in GLM_CONFIGS:
+        return GLM_CONFIGS[name]
+    _model_configs()
+    all_configs = globals()["ALL_CONFIGS"]
     try:
-        return ALL_CONFIGS[name]
+        return all_configs[name]
     except KeyError:
         raise KeyError(
-            f"unknown arch {name!r}; have {sorted(ALL_CONFIGS)}"
+            f"unknown arch {name!r}; have {sorted(all_configs)}"
         ) from None

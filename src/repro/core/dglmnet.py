@@ -153,7 +153,7 @@ def _iteration(X, y, beta, m, lam, opts: DGLMNETOptions, w=None, z=None):
 dglmnet_iteration = jax.jit(_iteration, static_argnames=("opts",))
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=64)
 def _solver_for(opts: DGLMNETOptions):
     """One compiled while_loop program per options bundle (lam is traced,
     so a whole regularization path reuses a single compilation)."""

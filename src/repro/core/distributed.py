@@ -232,7 +232,7 @@ def make_dglmnet_step_sparse(mesh: Mesh, opts: DGLMNETOptions, *,
     return step
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=64)
 def make_slab_margins(mesh: Mesh, n_loc: int, model_axis: str = "model"):
     """Sharded sparse matvec ``margins(row_idx, values, beta) -> m`` over
     (p, DP, K) slabs: each (model, data) shard runs the slab SpMV kernel
@@ -260,7 +260,7 @@ def make_slab_margins(mesh: Mesh, n_loc: int, model_axis: str = "model"):
     return slab_margins
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=64)
 def make_slab_densifier(mesh: Mesh, n_loc: int, model_axis: str = "model"):
     """One-shot on-mesh densify ``(row_idx, values) -> X`` (P(data, model))
     — the dense-Gram fallback setup for slabs above the sparse-win density
@@ -334,7 +334,7 @@ def make_dglmnet_step(mesh: Mesh, opts: DGLMNETOptions, *, model_axis: str = "mo
     )
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=64)
 def _solver_for(mesh: Mesh, opts: DGLMNETOptions, model_axis: str):
     return engine.make_solver(
         make_distributed_iteration(mesh, opts, model_axis=model_axis),
@@ -344,7 +344,7 @@ def _solver_for(mesh: Mesh, opts: DGLMNETOptions, model_axis: str):
     )
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=64)
 def _solver_sparse_for(mesh: Mesh, opts: DGLMNETOptions, model_axis: str):
     return engine.make_solver(
         make_distributed_iteration_sparse(mesh, opts, model_axis=model_axis),

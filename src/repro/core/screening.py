@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import engine
 from repro.core.objective import grad_nll_from_margins
 
 
@@ -94,7 +95,7 @@ def budgeted_admission(viol, g_abs, budget: int):
     solve straight back to zero; the budget grows the working set
     incrementally instead. Ties at the cutoff are all admitted (the budget
     is a growth *rate*, not an exact count). Returns the admitted mask."""
-    n_viol = int(viol.sum())
+    n_viol = int(engine.device_get(viol.sum()))
     if n_viol <= budget:
         return viol
     scores = jnp.where(viol, g_abs, -jnp.inf)
@@ -142,7 +143,7 @@ def scatter_columns(beta_sub, idx, p: int):
     return jnp.zeros(p, beta_sub.dtype).at[idx].set(beta_sub, mode="drop")
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=64)
 def _sparse_corr_program(mesh: Mesh, n_loc: int, tile: int,
                          model_axis: str = "model"):
     """The shard_map slab-stream behind both the sparse screen and
@@ -186,7 +187,7 @@ def _sparse_corr_program(mesh: Mesh, n_loc: int, tile: int,
     return corr
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=64)
 def make_sparse_corr(mesh: Mesh, n_loc: int, tile: int,
                      model_axis: str = "model"):
     """Jitted distributed slab correlation ``corr(row_idx, values, v) ->
@@ -199,7 +200,7 @@ def make_sparse_corr(mesh: Mesh, n_loc: int, tile: int,
     return jax.jit(_sparse_corr_program(mesh, n_loc, tile, model_axis))
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=64)
 def make_sparse_screen(mesh: Mesh, n_loc: int, tile: int,
                        model_axis: str = "model"):
     """Distributed strong-rule gradient pass over by-feature sparse slabs.

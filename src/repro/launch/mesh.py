@@ -30,6 +30,19 @@ def make_dev_mesh(data: int = 2, model: int = 4):
     return make_mesh((data, model), ("data", "model"))
 
 
+def parse_mesh(spec: str):
+    """CLI mesh spec: ``prod``, ``prod-multipod``, or ``DxM``/``PxDxM``."""
+    if spec == "prod":
+        return make_production_mesh()
+    if spec == "prod-multipod":
+        return make_production_mesh(multi_pod=True)
+    dims = tuple(int(x) for x in spec.split("x"))
+    names = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+    from repro.compat import make_mesh
+
+    return make_mesh(dims, names)
+
+
 def num_chips(mesh) -> int:
     n = 1
     for v in mesh.shape.values():

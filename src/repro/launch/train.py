@@ -19,23 +19,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import save_pytree
 from repro.configs import MODEL_CONFIGS
 from repro.data.lm_data import batches, zipf_corpus
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import parse_mesh
 from repro.optim import warmup_cosine
 from repro.sharding.ctx import mesh_context
 from repro.sharding.rules import input_pspecs, opt_state_pspecs, param_pspecs
 from repro.train import make_train_state, make_train_step
-
-
-def parse_mesh(spec: str):
-    if spec == "prod":
-        return make_production_mesh()
-    if spec == "prod-multipod":
-        return make_production_mesh(multi_pod=True)
-    dims = tuple(int(x) for x in spec.split("x"))
-    names = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
-    from repro.compat import make_mesh
-
-    return make_mesh(dims, names)
 
 
 def main():

@@ -19,7 +19,8 @@ locally and through the mesh.
 """
 from __future__ import annotations
 
-from functools import lru_cache, partial
+from collections import OrderedDict
+from functools import partial
 from typing import Tuple
 
 import jax
@@ -36,15 +37,20 @@ def _score_local(rows, vals, lam_idx, betas, *, n_loc: int):
     return kops.slab_path_spmv(rows, vals, lam_idx, betas, n_loc=n_loc)
 
 
-@lru_cache(maxsize=None)
 def make_path_margins(mesh, n_loc: int, model_axis: str = "model"):
     """Sharded batched path scoring ``(row_idx, values, lam_idx, betas) ->
     scores`` — ``core.distributed.make_slab_margins`` with the replicated
     beta vector replaced by the P(model)-sharded ``(L, p_pad)`` stack plus
     a per-row operating-point index. Each (model, data) shard gathers its
     own coefficient block rows and runs the slab kernel; one psum over
-    ``model`` assembles the exact scores. Cached per (mesh, n_loc) so a
-    serving process compiles each batch geometry once."""
+    ``model`` assembles the exact scores.
+
+    Deliberately NOT module-cached: a process-lifetime cache here pins the
+    mesh (and through jit internals, the last dispatch's arguments —
+    i.e. a retired snapshot's beta stack) for as long as the module
+    lives. :class:`PathScorer` owns a small per-instance cache instead,
+    so dropping the scorer drops the compiled programs and
+    ``PathStore.swap`` can actually release the old coefficients."""
     from jax.sharding import PartitionSpec as P
 
     from repro.compat import shard_map
@@ -79,8 +85,27 @@ class PathScorer:
     the returned version says which path the whole batch was scored with.
     """
 
+    #: distinct (mesh, n_loc) program geometries kept per scorer; a
+    #: serving process sees a handful of batch capacities, so eviction
+    #: means at worst a recompile, never wrong scores
+    _CACHE_MAX = 8
+
     def __init__(self, store: PathStore):
         self.store = store
+        self._margins: "OrderedDict[tuple, object]" = OrderedDict()
+
+    def _margins_for(self, mesh, n_loc: int):
+        """Per-instance LRU of compiled sharded scoring programs."""
+        key = (mesh, n_loc)
+        fn = self._margins.get(key)
+        if fn is None:
+            fn = make_path_margins(mesh, n_loc)
+            self._margins[key] = fn
+            while len(self._margins) > self._CACHE_MAX:
+                self._margins.popitem(last=False)
+        else:
+            self._margins.move_to_end(key)
+        return fn
 
     def score(self, batch: PackedBatch,
               lams) -> Tuple[np.ndarray, int]:
@@ -130,7 +155,7 @@ class PathScorer:
                 f"{_data_extent(mesh)} — pack with dp=store ddim")
         daxes = _data_axes(mesh)
         slab_sh = NamedSharding(mesh, P("model", daxes, None))
-        fn = make_path_margins(mesh, batch.n_loc)
+        fn = self._margins_for(mesh, batch.n_loc)
         return fn(
             jax.device_put(batch.row_idx, slab_sh),
             jax.device_put(batch.values, slab_sh),

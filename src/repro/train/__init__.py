@@ -1,10 +1,38 @@
+"""LM training surface — lazily loaded.
+
+``repro.train.metrics`` is the only submodule the GLM path uses
+(``LogisticL1.score`` and the fig1 benchmark import ``glm_eval_fn`` /
+``auprc``); the trainer stack (``state``, ``train_step``) pulls in the
+whole seed model zoo (``repro.models``, ``repro.optim``,
+``repro.configs``). Importing this package must therefore NOT load the
+zoo — ``from repro.train import make_train_step`` still works via PEP
+562, but the import happens on first attribute access, so
+``import repro.train.metrics`` stays zoo-free. The dead-code inventory
+rule (``repro.analysis.rules.dead_code``) treats imports inside a
+module-level ``__getattr__`` as a declared lazy boundary.
+"""
 from repro.train.metrics import accuracy, auprc, glm_eval_fn, log_loss  # noqa: F401
-from repro.train.state import make_train_state, train_state_shapes  # noqa: F401
-from repro.train.train_step import (  # noqa: F401
-    IGNORE,
-    cross_entropy,
-    make_loss_fn,
-    make_prefill_step,
-    make_serve_step,
-    make_train_step,
-)
+
+_LAZY = {
+    "make_train_state": "repro.train.state",
+    "train_state_shapes": "repro.train.state",
+    "IGNORE": "repro.train.train_step",
+    "cross_entropy": "repro.train.train_step",
+    "make_loss_fn": "repro.train.train_step",
+    "make_prefill_step": "repro.train.train_step",
+    "make_serve_step": "repro.train.train_step",
+    "make_train_step": "repro.train.train_step",
+}
+
+
+def __getattr__(name):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(target), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -1,0 +1,14 @@
+"""Golden fixture: trips bench-timing and nothing else.
+
+A ``perf_counter`` delta around an (async-dispatched) JAX call without a
+``block_until_ready`` times the enqueue, not the work.
+"""
+import time
+
+import jax  # noqa: F401  (the rule only inspects JAX-importing modules)
+
+
+def time_fit(fn, x):
+    t0 = time.perf_counter()
+    y = fn(x)
+    return y, time.perf_counter() - t0

@@ -1,0 +1,11 @@
+"""Golden fixture for dead-code: an orphan module nothing imports.
+
+The rule only inventories ``src/`` modules, so this file is inert where
+it sits (tests/fixtures/); ``tests/test_analysis.py`` re-parses this
+source under the synthetic path ``src/repro/orphan_scaffold.py`` and
+asserts exactly one dead-code finding.
+"""
+
+
+def unused_helper():
+    return 0

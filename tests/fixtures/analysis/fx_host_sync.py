@@ -1,0 +1,11 @@
+"""Golden fixture: trips host-sync-in-jit and nothing else.
+
+``float()`` on a traced operand inside a jitted function forces a host
+sync (or a ConcretizationTypeError) at the worst possible place.
+"""
+import jax
+
+
+@jax.jit
+def squash(x):
+    return float(x) + 1.0

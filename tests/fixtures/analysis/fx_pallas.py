@@ -1,0 +1,18 @@
+"""Golden fixture: trips pallas-conventions and nothing else.
+
+A public pallas_call entry point without an ``interpret`` parameter
+cannot be validated against its CPU oracle (tests) nor forced native
+(TPU) by the caller. No sibling ref.py exists here, so only the
+``interpret`` convention fires.
+"""
+import jax
+import jax.experimental.pallas as pl
+
+
+def scale_pallas(x):
+    shape = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    return pl.pallas_call(_scale_kernel, out_shape=shape)(x)
+
+
+def _scale_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0

@@ -1,0 +1,18 @@
+"""Golden fixture: trips psum-axis and nothing else.
+
+The shard_map body psums over ``"feature"`` but the decoration only ever
+declares ``"model"`` — the collective would fail (or silently reduce the
+wrong axis after a rename) at run time.
+"""
+from functools import partial
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+mesh = None  # stand-in: the rule is static and never builds a Mesh
+
+
+@partial(shard_map, mesh=mesh, in_specs=(P("model"),), out_specs=P("model"))
+def block_sum(x):
+    return jax.lax.psum(x, "feature")

@@ -1,0 +1,13 @@
+"""Golden fixture: trips retrace-hazard and nothing else.
+
+An unbounded ``lru_cache`` in a JAX module pins its keys and values
+(meshes, compiled programs, device arrays) for the process lifetime.
+"""
+from functools import lru_cache
+
+import jax  # noqa: F401  (the rule only inspects JAX-importing modules)
+
+
+@lru_cache(maxsize=None)
+def cached_program(key):
+    return key

@@ -1,0 +1,11 @@
+"""Golden fixture: trips sharded-concat and nothing else.
+
+A direct ``jnp.concatenate`` in a mesh-aware module (the ``Mesh`` import
+marks it) must route through ``sharding.collect.concat_replicated``.
+"""
+import jax.numpy as jnp
+from jax.sharding import Mesh  # noqa: F401  (marks the module mesh-aware)
+
+
+def gather_pieces(xs):
+    return jnp.concatenate(xs)

@@ -1,0 +1,171 @@
+"""Tier-1 tests for the ``repro.analysis`` lint suite.
+
+Golden fixtures under ``tests/fixtures/analysis/`` each trip exactly one
+rule (``clean.py`` trips none); pragma and TOML suppression semantics
+are exercised on temp files; and the merged tree itself must scan clean
+with the checked-in allowlist — the same invocation CI's lint lane runs.
+"""
+import json
+import os
+import re
+
+import pytest
+
+from repro.analysis import run_analysis
+from repro.analysis import runner
+from repro.analysis.context import ModuleInfo, Project
+from repro.analysis.findings import Suppressions
+from repro.analysis.rules import ALL_RULES, dead_code
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = "tests/fixtures/analysis"
+
+#: fixture -> the ONE rule it must trip
+GOLDEN = {
+    "fx_sharded_concat.py": "sharded-concat",
+    "fx_psum_axis.py": "psum-axis",
+    "fx_host_sync.py": "host-sync-in-jit",
+    "fx_retrace.py": "retrace-hazard",
+    "fx_bench_timing.py": "bench-timing",
+    "fx_pallas.py": "pallas-conventions",
+}
+
+
+def _scan(relpath, **kw):
+    kw.setdefault("root", REPO)
+    kw.setdefault("excludes", ())      # fixtures are excluded by default
+    kw.setdefault("allowlist", None)
+    return run_analysis([relpath], **kw)
+
+
+# ---------------------------------------------------------------------------
+# golden fixtures
+# ---------------------------------------------------------------------------
+
+def test_rule_registry_covers_the_suite():
+    ids = [r.RULE_ID for r in ALL_RULES]
+    assert len(ids) == len(set(ids))
+    for required in ("sharded-concat", "psum-axis", "host-sync-in-jit",
+                     "retrace-hazard", "bench-timing", "pallas-conventions",
+                     "dead-code"):
+        assert required in ids
+
+
+@pytest.mark.parametrize("fname,rule", sorted(GOLDEN.items()))
+def test_fixture_trips_exactly_one_rule(fname, rule):
+    rep = _scan(f"{FIXTURES}/{fname}")
+    assert [f.rule for f in rep.findings] == [rule], \
+        [f.render() for f in rep.findings]
+    f = rep.findings[0]
+    assert f.file == f"{FIXTURES}/{fname}" and f.line >= 1
+
+
+def test_clean_fixture_trips_nothing():
+    rep = _scan(f"{FIXTURES}/clean.py")
+    assert rep.ok and rep.findings == [] and rep.n_files == 1
+
+
+def test_dead_code_fixture_under_synthetic_src_path():
+    # dead-code only inventories src/ modules, so the fixture is re-parsed
+    # under a src/ path; where it actually lives it must stay inert
+    with open(os.path.join(REPO, FIXTURES, "fx_dead_code.py")) as fh:
+        source = fh.read()
+    mod = ModuleInfo.parse("src/repro/orphan_scaffold.py", source)
+    findings = list(dead_code.check(Project(root=REPO, modules=[mod])))
+    assert [f.rule for f in findings] == ["dead-code"]
+    assert "repro.orphan_scaffold" in findings[0].message
+    assert _scan(f"{FIXTURES}/fx_dead_code.py").ok
+
+
+def test_finding_render_format():
+    rep = _scan(f"{FIXTURES}/fx_retrace.py")
+    assert re.fullmatch(
+        rf"{FIXTURES}/fx_retrace\.py:\d+ · retrace-hazard · .+",
+        rep.findings[0].render())
+
+
+# ---------------------------------------------------------------------------
+# suppression semantics
+# ---------------------------------------------------------------------------
+
+_TRIPPING = (
+    "import jax.numpy as jnp\n"
+    "from jax.sharding import Mesh  # noqa: F401\n"
+    "\n"
+    "\n"
+    "def f(xs):\n"
+    "{pragma}"
+    "    return jnp.concatenate(xs)\n"
+)
+
+
+def test_pragma_with_justification_suppresses(tmp_path):
+    (tmp_path / "mod.py").write_text(_TRIPPING.format(
+        pragma="    # allow[sharded-concat]: host lists, never sharded\n"))
+    rep = run_analysis(["mod.py"], root=str(tmp_path), excludes=(),
+                       allowlist=None)
+    assert rep.ok
+    assert [f.rule for f in rep.suppressed] == ["sharded-concat"]
+
+
+def test_pragma_without_justification_is_a_finding(tmp_path):
+    (tmp_path / "mod.py").write_text(_TRIPPING.format(
+        pragma="    # allow[sharded-concat]:\n"))
+    rep = run_analysis(["mod.py"], root=str(tmp_path), excludes=(),
+                       allowlist=None)
+    assert not rep.ok
+    assert sorted(f.rule for f in rep.findings) == \
+        ["bad-pragma", "sharded-concat"]
+
+
+def test_allowlist_glob_suppresses(tmp_path):
+    (tmp_path / "mod.py").write_text(_TRIPPING.format(pragma=""))
+    (tmp_path / "al.toml").write_text(
+        '[[allow]]\nrule = "sharded-concat"\npath = "mod.py"\n'
+        'reason = "fixture operands are host lists"\n')
+    rep = run_analysis(["mod.py"], root=str(tmp_path), excludes=(),
+                       allowlist="al.toml")
+    assert rep.ok and [f.rule for f in rep.suppressed] == ["sharded-concat"]
+
+
+def test_allowlist_entry_without_reason_aborts(tmp_path):
+    al = tmp_path / "al.toml"
+    al.write_text('[[allow]]\nrule = "sharded-concat"\npath = "*"\n')
+    with pytest.raises(SystemExit, match="no reason"):
+        Suppressions.load_toml(str(al))
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_json_output(tmp_path, capsys):
+    (tmp_path / "mod.py").write_text(
+        "import jax\n\n\n@jax.jit\ndef f(x):\n    return float(x)\n")
+    rc = runner.main(["mod.py", "--format", "json", "--root", str(tmp_path),
+                      "--allowlist", ""])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1 and out["ok"] is False and out["files"] == 1
+    assert [f["rule"] for f in out["findings"]] == ["host-sync-in-jit"]
+    assert set(out["findings"][0]) == {"file", "line", "rule", "message"}
+
+
+def test_cli_rule_selection(tmp_path, capsys):
+    # same tripping file, but only the bench-timing rule armed -> clean
+    (tmp_path / "mod.py").write_text(
+        "import jax\n\n\n@jax.jit\ndef f(x):\n    return float(x)\n")
+    rc = runner.main(["mod.py", "--rules", "bench-timing", "--root",
+                      str(tmp_path), "--allowlist", ""])
+    assert rc == 0
+    assert "0 finding(s)" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# the tree of record is clean — the exact CI lint-lane invocation
+# ---------------------------------------------------------------------------
+
+def test_merged_tree_scans_clean():
+    rep = run_analysis(["src", "tests", "benchmarks", "scripts"], root=REPO)
+    assert rep.ok, "\n".join(
+        f.render() for f in rep.findings + rep.parse_errors)
+    assert rep.n_files > 50

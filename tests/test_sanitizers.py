@@ -1,0 +1,151 @@
+"""Tier-1 wiring of the runtime sanitizers (``repro.analysis.sanitize``).
+
+Three contracts get teeth here:
+
+* the engine: one solve is ONE sanctioned host transfer
+  (``repro.core.engine.device_get``) — anything else that materializes a
+  device value raises;
+* the screened path: every device->host crossing in the driver (active
+  and violation counts, per-point telemetry) goes through the same
+  audited door, so a whole ``LogisticL1.path`` runs under the sanitizer;
+* warm code never recompiles: ``compile_sanitizer(0)`` certifies the
+  zero-retrace property of the warm-started path (>= 10 lambdas) and of
+  the serve scorer's repeat dispatch.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.sanitize import (
+    CompileBudgetExceeded,
+    FetchBudgetExceeded,
+    HostTransferError,
+    compile_sanitizer,
+    transfer_sanitizer,
+)
+from repro.api import DenseDesign, LogisticL1
+from repro.core import engine
+from repro.core.dglmnet import DGLMNETOptions
+
+_OPTS = dict(num_blocks=4, tile=8, max_iters=10)
+_PATH_LEN = 12            # acceptance: zero retraces across >= 10 lambdas
+
+
+@pytest.fixture(scope="module")
+def problem():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(120, 40)), jnp.float32)
+    beta = np.zeros(40)
+    beta[:6] = rng.normal(size=6) * 2.0
+    probs = 1.0 / (1.0 + np.exp(-(np.asarray(X) @ beta)))
+    y = jnp.asarray((rng.random(120) < probs).astype(np.float32))
+    return X, y
+
+
+@pytest.fixture(scope="module")
+def warm_path(problem):
+    """Cold leg: pays every compile once so the certificate tests below
+    measure only the warm behavior."""
+    X, y = problem
+    est = LogisticL1(opts=DGLMNETOptions(**_OPTS))
+    return est.path(DenseDesign(X), y, path_len=_PATH_LEN)
+
+
+# ---------------------------------------------------------------------------
+# transfer sanitizer
+# ---------------------------------------------------------------------------
+
+def test_fit_is_one_sanctioned_fetch(problem):
+    X, y = problem
+    est = LogisticL1(opts=DGLMNETOptions(**_OPTS))
+    with transfer_sanitizer(max_fetches=1) as ts:
+        res = est.fit(DenseDesign(X), y, lam=0.05)
+    assert ts.fetches == 1
+    assert res.beta.shape == (40,) and res.n_iters >= 1
+
+
+def test_screened_path_is_fully_audited(problem, warm_path):
+    # the whole driver (screen counts, KKT rounds, per-point telemetry)
+    # crosses to host only through the engine door, each crossing counted
+    X, y = problem
+    est = LogisticL1(opts=DGLMNETOptions(**_OPTS))
+    with transfer_sanitizer(max_fetches=400) as ts:
+        path = est.path(DenseDesign(X), y, path_len=_PATH_LEN)
+    assert len(path) == _PATH_LEN
+    assert _PATH_LEN <= ts.fetches <= 400
+
+
+def test_unsanctioned_materialization_trips(problem):
+    x = jnp.ones(4)
+    with pytest.raises(HostTransferError):
+        with transfer_sanitizer():
+            jnp.sum(x).item()
+    with pytest.raises(HostTransferError):
+        with transfer_sanitizer():
+            float(jnp.sum(x))
+
+
+def test_fetch_budget_exceeded():
+    a, b = jnp.ones(3), jnp.ones(3)
+    with pytest.raises(FetchBudgetExceeded):
+        with transfer_sanitizer(max_fetches=1):
+            engine.device_get(a)
+            engine.device_get(b)
+
+
+def test_transfer_sanitizer_restores_patches():
+    x = jnp.ones(())
+    with transfer_sanitizer():
+        pass
+    assert float(x) == 1.0 and x.item() == 1.0
+
+
+# ---------------------------------------------------------------------------
+# compile sanitizer
+# ---------------------------------------------------------------------------
+
+def test_zero_retrace_certificate_across_warm_path(problem, warm_path):
+    X, y = problem
+    est = LogisticL1(opts=DGLMNETOptions(**_OPTS))
+    with compile_sanitizer(0) as cs:
+        path = est.path(DenseDesign(X), y, path_len=_PATH_LEN)
+    assert cs.count == 0, cs.compiles
+    assert len(path) >= 10
+    assert np.allclose(np.asarray(path.betas), np.asarray(warm_path.betas))
+
+
+def test_compile_budget_trips_on_shape_change():
+    @jax.jit
+    def g(v):
+        return v * 2.0
+
+    a, b = jnp.ones(8), jnp.ones(9)   # made BEFORE arming the counter
+    g(a)                              # warm the first shape
+    with compile_sanitizer(0):
+        g(a)                          # warm call: no compile
+    with pytest.raises(CompileBudgetExceeded, match=r"jit\(g\)"):
+        with compile_sanitizer(0):
+            g(b)                      # new shape: retrace + recompile
+
+
+def test_serve_scorer_warm_dispatch_never_recompiles(warm_path):
+    from repro.serve import PathScorer, PathStore, RequestBatcher
+
+    store = PathStore(warm_path)
+    scorer = PathScorer(store)
+    batcher = RequestBatcher(store.snapshot.p, max_batch=16,
+                             pad_p_to=store.pad_p_to)
+    rng = np.random.default_rng(1)
+    for i in range(16):
+        req = {f"tok{int(t)}": float(v) for t, v in zip(
+            rng.integers(0, 160, size=4), rng.normal(size=4))}
+        batcher.submit(req, float(warm_path.lambdas[i % len(warm_path)]))
+    batch, lams = batcher.drain()
+    scorer.score(batch, lams)         # warm the scoring program
+    with compile_sanitizer(0) as cs:
+        s1, v1 = scorer.score(batch, lams)
+        s2, v2 = scorer.score(batch, lams)
+    assert cs.count == 0, cs.compiles
+    assert v1 == v2 and np.array_equal(s1, s2) and len(s1) == batch.n_live

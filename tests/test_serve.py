@@ -330,6 +330,40 @@ def test_hot_swap_never_mixes_versions(fitted):
         t.join()
 
 
+def test_swap_releases_old_coefficients(fitted):
+    """Regression for the module-lifetime path-margins cache: after a
+    swap, the retired snapshot and its device coefficient stack must be
+    collectible — nothing (jit dispatch caches included) may pin them.
+    Numpy-backed PathResults make the store own distinct device arrays,
+    so the weakrefs below watch store-owned memory, not test locals."""
+    import gc
+    import weakref
+
+    X, _, _, path = fitted
+    p = X.shape[1]
+
+    def np_version(sign):
+        return PathResult(
+            lambdas=path.lambdas, betas=np.asarray(sign * path.betas),
+            nnz=path.nnz, f=path.f, n_iters=path.n_iters,
+            metrics=path.metrics, screen=path.screen)
+
+    store = PathStore(np_version(1.0))
+    scorer = PathScorer(store)
+    batch = pack_requests([encode_request({"a": 1.0}, p)], p)
+    lams = np.full(1, float(path.lambdas[0]))
+    scorer.score(batch, lams)
+
+    s0 = store.snapshot
+    refs = weakref.ref(s0), weakref.ref(s0.betas)
+    store.swap(np_version(-1.0))
+    scorer.score(batch, lams)     # rebinds the dispatch's last-call caches
+    del s0
+    gc.collect()
+    assert refs[0]() is None, "retired StoreSnapshot still pinned"
+    assert refs[1]() is None, "retired coefficient stack still on device"
+
+
 # ---------------------------------------------------------------------------
 # mesh lane (subprocess fake devices)
 # ---------------------------------------------------------------------------
