@@ -6,6 +6,7 @@ from repro.analysis.rules import (
     bench_timing,
     dead_code,
     host_sync,
+    nonfinite_guard,
     pallas,
     psum_axis,
     retrace,
@@ -20,6 +21,7 @@ ALL_RULES = (
     bench_timing,
     pallas,
     dead_code,
+    nonfinite_guard,
 )
 
 RULES_BY_ID = {r.RULE_ID: r for r in ALL_RULES}

@@ -47,6 +47,7 @@ ROOTS = (
     "repro.core",
     "repro.serve",
     "repro.launch.serve_glm",
+    "repro.launch.chaos_glm",
     "repro.checkpoint",
     "repro.compat",
     "repro.analysis",

@@ -1,0 +1,110 @@
+"""nonfinite-guard: unguarded device->host materialization on the serve
+boundary.
+
+The serving stack's contract (PR 8) is that poison never reaches a
+caller: scores and solver results cross to host exactly once, and that
+crossing is where NaN/Inf must be caught — the scorer pins the store
+back to its last-good snapshot (``PathScorer.score``), the engine's
+``fetch`` validates histories against the typed device-side ``status``.
+A new host-crossing added to this layer without a finiteness check is a
+hole in that contract: one poisoned coefficient row and the NaN sails
+straight into a response.
+
+Scope heuristic: modules in the serve package (or importing from it) and
+the solver engine. Within scope, a function that materializes a
+*computed* device value on host — ``jax.device_get`` / the engine's
+``device_get`` indirection, or ``np.asarray``/``np.array`` applied to a
+call result — must mention ``isfinite``/``isnan`` somewhere in the same
+function (the guard), or carry an ``allow[nonfinite-guard]`` pragma
+saying why the value cannot be poisoned (e.g. it is a reference oracle,
+not served output). ``np.asarray`` over literals, comprehensions,
+attributes and builtin results is exempt — those are host values already.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.context import ModuleInfo, Project
+from repro.analysis.findings import Finding
+
+RULE_ID = "nonfinite-guard"
+DOC = ("device->host materialization in the serve/engine layer with no "
+       "isfinite/isnan check in scope — poison can reach a caller")
+
+#: np.asarray over results of these builtins is plain host data
+_HOST_BUILTINS = {
+    "sorted", "list", "tuple", "range", "zip", "map", "len", "min", "max",
+    "sum", "dict", "set", "str", "enumerate", "reversed", "float", "int",
+}
+
+_MATERIALIZERS = {"numpy.asarray", "numpy.array", "numpy.asanyarray"}
+
+
+def _in_scope(mod: ModuleInfo) -> bool:
+    if "src/repro/serve/" in mod.path or mod.path.endswith("core/engine.py"):
+        return True
+    return any(m == "repro.serve" or m.startswith("repro.serve.")
+               for m in mod.imported_modules)
+
+
+def _is_device_get(mod: ModuleInfo, node: ast.Call) -> bool:
+    q = mod.qualname(node.func)
+    return q is not None and (q == "device_get"
+                              or q.endswith(".device_get"))
+
+
+def _materializes_computed(mod: ModuleInfo, node: ast.Call) -> bool:
+    """np.asarray/np.array whose operand is itself a call result — the
+    only asarray form that can be a fresh device->host crossing (host
+    literals/comprehensions/attributes carry no device value)."""
+    if mod.qualname(node.func) not in _MATERIALIZERS:
+        return False
+    if not node.args or not isinstance(node.args[0], ast.Call):
+        return False
+    inner = node.args[0].func
+    if isinstance(inner, ast.Name) and inner.id in _HOST_BUILTINS:
+        return False
+    return True
+
+
+def _has_guard(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr in ("isfinite",
+                                                            "isnan"):
+            return True
+        if isinstance(node, ast.Name) and node.id in ("isfinite", "isnan"):
+            return True
+    return False
+
+
+def _check_fn(mod: ModuleInfo, fn: ast.FunctionDef) -> Iterable[Finding]:
+    hits: List[ast.Call] = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        if _is_device_get(mod, node) or _materializes_computed(mod, node):
+            hits.append(node)
+    if not hits or _has_guard(fn):
+        return
+    node = hits[0]
+    what = ("device_get" if _is_device_get(mod, node)
+            else "np.asarray of a computed value")
+    yield Finding(
+        file=mod.path, line=node.lineno, rule=RULE_ID,
+        message=(
+            f"{fn.name}() crosses a computed value to host ({what}) with "
+            f"no isfinite/isnan check in scope — on the serve/engine "
+            f"boundary poison must be caught at the crossing (or "
+            f"allow[{RULE_ID}] stating why this value cannot be poisoned)"),
+    )
+
+
+def check(project: Project) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for mod in project.modules:
+        if not _in_scope(mod):
+            continue
+        for fn in mod.functions():
+            out.extend(_check_fn(mod, fn))
+    return out

@@ -20,7 +20,7 @@ entry point.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Callable, List, Optional
 
 import jax
@@ -59,9 +59,11 @@ from repro.core.screening import (
 from repro.api.types import (  # noqa: F401  (re-export: path output)
     PathPoint,
     PathResult,
+    _jsonable,
 )
 from repro.core.screening import _nll_residual
 from repro.data.byfeature import k_class, scatter_features
+from repro.resilience import PathProgress, maybe_kill
 from repro.sharding.collect import replicate
 
 
@@ -127,6 +129,15 @@ def _screened_point(p_cap, lam, lam_prev, beta, m, *, grad_abs,
         else:
             cap = capacity_bucket(count, p_cap, tile=cap_tile)
             res, beta_new, m_new = restricted_solve(mask, cap, beta)
+            if getattr(res, "status", 0):
+                # Guardrail trip inside the restricted solve: certification
+                # cannot proceed on a degraded iterate. Bail out with the
+                # *input* state (the last certified path point) intact —
+                # the path driver's degradation ladder owns the recovery.
+                info = {"active": count, "capacity": cap,
+                        "kkt_rounds": rounds, "deferred": deferred,
+                        "status": int(res.status)}
+                return res, beta, m, info, mask
         g_abs = grad_abs(m_new)
         viol = kkt_violations(g_abs, lam, mask, tol=kkt_tol)
         n_viol = int(engine.device_get(viol.sum()))
@@ -151,6 +162,40 @@ def _screened_point(p_cap, lam, lam_prev, beta, m, *, grad_abs,
     info = {"active": int(engine.device_get(mask.sum())), "capacity": cap,
             "kkt_rounds": rounds, "deferred": deferred}
     return res, beta_new, m_new, info, mask
+
+
+def _save_progress(progress: PathProgress, pt_idx: int, lams, lam_prev,
+                   beta, m, carry_mask, points, p: int, p_cap: int) -> None:
+    """Checkpoint the path driver's warm-start chain + emitted points as
+    one rotated :class:`repro.resilience.PathProgress` slot (atomic
+    publish, CRC-verified payload). float32 arrays round-trip npz exactly
+    and the JSON meta round-trips Python floats exactly, so a resume
+    continues bit-identically."""
+    tree = {
+        "beta": beta,
+        "m": m,
+        "carry_mask": (carry_mask.astype(jnp.int8) if carry_mask is not None
+                       else jnp.zeros((1,), jnp.int8)),
+        # allow[sharded-concat]: path-point betas are replicated rows (mesh points collect through sharding.collect.replicate before emission)
+        "point_betas": (jnp.stack([pt.beta for pt in points]) if points
+                        else jnp.zeros((0, p), jnp.float32)),
+    }
+    meta = {
+        "kind": "PathProgress",
+        "next_index": pt_idx + 1,
+        "lam_prev": float(lam_prev),
+        "lams": [float(v) for v in lams],
+        "p": int(p),
+        "p_cap": int(p_cap),
+        "has_carry_mask": carry_mask is not None,
+        "points": [
+            {"lam": float(pt.lam), "nnz": int(pt.nnz), "f": float(pt.f),
+             "n_iters": int(pt.n_iters), "metrics": _jsonable(pt.metrics),
+             "screen": _jsonable(pt.screen), "status": int(pt.status)}
+            for pt in points
+        ],
+    }
+    progress.save(pt_idx, tree, meta)
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +228,7 @@ def _fit_local_dense(X, y, lam, opts: DGLMNETOptions, beta0,
         alpha_history=alphas,
         unit_step_frac=int(host.unit_steps) / max(it, 1),
         converged=bool(host.converged),
+        status=int(host.status),
     )
 
 
@@ -456,6 +502,8 @@ class LogisticL1:
         carry_working_set: bool = True,
         violation_budget: Optional[int] = 512,
         densify: Optional[bool] = None,
+        checkpoint_every: Optional[int] = None,
+        resume_from: Optional[str] = None,
     ) -> PathResult:
         """Warm-started screened regularization path (paper Algorithm 5):
         lambda = lambda_max * 2^{-i}, i = 1..path_len, each point solved
@@ -476,6 +524,18 @@ class LogisticL1:
         the full-p warm-started loop (the screening tests' oracle).
         ``carry_working_set``/``violation_budget`` are the blitz-style
         growth knobs (see :func:`_screened_point`).
+
+        Robustness (PR 8): each point's solve carries the engine's typed
+        ``status``; on a guardrail trip the driver degrades per-lambda —
+        re-warm-start from the previous certified point without the
+        carried working set, then (``cycle_mode="blocked"``) fall back to
+        the sequential cycle, then skip-and-mark the point (beta/m stay at
+        the last certified state so the warm-start chain never ingests
+        garbage). ``resume_from=`` names a progress directory
+        (:class:`repro.resilience.PathProgress`): existing progress there
+        is resumed bit-identically from the last certified point;
+        ``checkpoint_every=k`` (requires ``resume_from``) checkpoints
+        every k-th point into it with atomic publish + CRC integrity.
         """
         design = self._design(data, y)
         strat = resolve(design, self.opts, densify=densify)
@@ -510,7 +570,7 @@ class LogisticL1:
             def grad_abs(m_cur):
                 return design._screen_abs_work(y, m_cur, tile=opts.tile)
 
-            def make_restricted_solve(lam):
+            def make_restricted_solve(lam, strat_=strat):
                 def restricted_solve(mask_work, cap, beta_work):
                     if front_packed:
                         # slab-capacity class of this working set: heavy
@@ -522,7 +582,7 @@ class LogisticL1:
                         k_cap = st.k_max
                     sub, beta_sub, idx = design._gather_work(
                         beta_work, mask_work, cap, k_cap, tile=opts.tile)
-                    res = _solve(sub, y, lam, strat, beta0=beta_sub)
+                    res = _solve(sub, y, lam, strat_, beta0=beta_sub)
                     return res, scatter_features(res.beta, idx, st.p_work), \
                         res.m
                 return restricted_solve
@@ -536,10 +596,10 @@ class LogisticL1:
             def grad_abs(m_cur):
                 return jnp.abs(design.correlation(_nll_residual(m_cur, y)))
 
-            def make_restricted_solve(lam):
+            def make_restricted_solve(lam, strat_=strat):
                 def restricted_solve(mask, cap, beta_cur):
                     sub, beta_sub, idx = design.gather(beta_cur, mask, cap)
-                    res = _solve(sub, y, lam, strat, beta0=beta_sub)
+                    res = _solve(sub, y, lam, strat_, beta0=beta_sub)
                     beta_full = design.scatter(res.beta, idx)
                     m_full = res.m if getattr(res, "m", None) is not None \
                         else sub.margins(res.beta)
@@ -563,44 +623,135 @@ class LogisticL1:
             return FitResult(beta=beta_cur, f=float("nan"), n_iters=0,
                              objective_history=[], alpha_history=[])
 
+        # -- resumable progress (repro.resilience.PathProgress) -------------
+        if checkpoint_every is not None:
+            if checkpoint_every < 1:
+                raise ValueError(
+                    f"checkpoint_every must be >= 1, got {checkpoint_every}")
+            if resume_from is None:
+                raise ValueError(
+                    "checkpoint_every= requires resume_from= (the progress "
+                    "directory checkpoints are written to and resumed from)")
+        progress = PathProgress(resume_from) if resume_from else None
+
         lam_prev = lmax
         carry_mask = None
         points: List[PathPoint] = []
-        for lam in lams:
+        start = 0
+        if progress is not None:
+            state = progress.load_latest()
+            if state is not None:
+                idx, arrays, meta = state
+                if meta.get("kind") != "PathProgress":
+                    raise ValueError(
+                        f"{resume_from} is not a path-progress directory")
+                if meta["lams"] != lams or meta["p"] != p \
+                        or meta["p_cap"] != int(p_cap):
+                    raise ValueError(
+                        f"progress in {resume_from} was written for a "
+                        f"different path (grid/shape mismatch) — point it "
+                        f"at a fresh directory or rerun with the original "
+                        f"arguments")
+                beta = jnp.asarray(arrays["beta"], jnp.float32)
+                m = jnp.asarray(arrays["m"], jnp.float32)
+                if slab_mesh:
+                    m = jax.device_put(m, design.vsharding())
+                if meta["has_carry_mask"]:
+                    carry_mask = jnp.asarray(arrays["carry_mask"] != 0)
+                lam_prev = float(meta["lam_prev"])
+                for j, d in enumerate(meta["points"]):
+                    points.append(PathPoint(
+                        lam=float(d["lam"]), nnz=int(d["nnz"]),
+                        f=float(d["f"]), n_iters=int(d["n_iters"]),
+                        beta=jnp.asarray(arrays["point_betas"][j]),
+                        metrics=dict(d["metrics"]), screen=dict(d["screen"]),
+                        status=int(d["status"]),
+                    ))
+                start = int(meta["next_index"])
+                if verbose:
+                    print(f"resuming path at point {start}/{len(lams)} "
+                          f"from {progress.slot(idx)}")
+
+        def solve_point(lam, prev_mask, strat_):
+            return _screened_point(
+                p_cap, lam, lam_prev, beta, m, grad_abs=grad_abs,
+                restricted_solve=make_restricted_solve(lam, strat_),
+                empty_result=empty_result, cap_tile=strat_.cap_tile,
+                kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
+                prev_mask=prev_mask, violation_budget=violation_budget,
+            )
+
+        for pt_idx in range(start, len(lams)):
+            lam = lams[pt_idx]
             if screen:
-                res, beta, m, info, mask = _screened_point(
-                    p_cap, lam, lam_prev, beta, m, grad_abs=grad_abs,
-                    restricted_solve=make_restricted_solve(lam),
-                    empty_result=empty_result, cap_tile=strat.cap_tile,
-                    kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
-                    prev_mask=carry_mask, violation_budget=violation_budget,
-                )
-                if carry_working_set:
+                res, beta_new, m_new, info, mask = solve_point(
+                    lam, carry_mask, strat)
+                pt_status = int(getattr(res, "status", 0))
+                # Per-lambda degradation ladder: a tripped solve never
+                # feeds the warm-start chain. (1) drop the carried working
+                # set and re-warm-start from the previous certified point;
+                # (2) blocked cycles fall back to the sequential chain;
+                # (3) skip-and-mark, keeping the last certified state.
+                if pt_status:
+                    res, beta_new, m_new, info, mask = solve_point(
+                        lam, None, strat)
+                    pt_status = int(getattr(res, "status", 0))
+                    info["degraded"] = "rewarm"
+                if pt_status and opts.cycle_mode == "blocked":
+                    seq_strat = resolve(
+                        design, _dc_replace(opts, cycle_mode="sequential"),
+                        densify=densify)
+                    res, beta_new, m_new, info, mask = solve_point(
+                        lam, None, seq_strat)
+                    pt_status = int(getattr(res, "status", 0))
+                    info["degraded"] = "sequential"
+                if pt_status:
+                    # skipped: beta/m stay at the previous certified point
+                    beta_new, m_new, mask = beta, m, carry_mask
+                    info = {**info, "skipped": True, "degraded": "skipped"}
+                beta, m = beta_new, m_new
+                if carry_working_set and not pt_status:
                     carry_mask = mask
             else:
                 res = _solve(design, y, lam, strat, beta0=beta)
-                beta = res.beta
-                m = res.m if getattr(res, "m", None) is not None \
-                    else design.margins(beta)
-                info = {}
+                pt_status = int(getattr(res, "status", 0))
+                if pt_status:
+                    # unscreened oracle loop: mark the point, hold the
+                    # warm-start chain at the last certified state
+                    info = {"skipped": True, "degraded": "skipped"}
+                else:
+                    beta = res.beta
+                    m = res.m if getattr(res, "m", None) is not None \
+                        else design.margins(beta)
+                    info = {}
             lam_prev = lam
             beta_out = to_output(beta) if to_output is not None else beta
             # one audited fetch for the per-point telemetry (engine's
             # device_get door — countable under the transfer sanitizer)
-            f_dev = res.f if res.n_iters else objective(m, y, beta, lam)
+            f_dev = (res.f if res.n_iters and not pt_status
+                     else objective(m, y, beta, lam))
             nnz_h, f_h = engine.device_get(
                 (jnp.sum(jnp.abs(beta_out) > 0), f_dev))
             nnz, f = int(nnz_h), float(f_h)
             metrics = eval_fn(beta_out) if eval_fn else {}
             points.append(
-                PathPoint(lam=lam, nnz=nnz, f=f, n_iters=res.n_iters,
-                          beta=beta_out, metrics=metrics, screen=info)
+                PathPoint(lam=lam, nnz=nnz, f=f,
+                          n_iters=0 if pt_status else res.n_iters,
+                          beta=beta_out, metrics=metrics, screen=info,
+                          status=pt_status)
             )
             if verbose:
                 print(
                     f"lambda={lam:10.4f} nnz={nnz:6d} f={points[-1].f:12.4f} "
-                    f"iters={res.n_iters:3d} {info} {metrics}"
+                    f"iters={points[-1].n_iters:3d} {info} {metrics}"
                 )
+            if progress is not None and checkpoint_every is not None \
+                    and (pt_idx + 1 - start) % checkpoint_every == 0:
+                _save_progress(progress, pt_idx, lams, lam_prev, beta, m,
+                               carry_mask, points, p, int(p_cap))
+            # fault-injection hook: simulated process death between points
+            # (after the checkpoint lands, like a real mid-path kill)
+            maybe_kill(pt_idx + 1)
         self.beta_ = points[-1].beta if points else None
         self.lam_ = lams[-1] if lams else None
         return PathResult.from_points(points)

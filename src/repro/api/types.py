@@ -27,6 +27,13 @@ class PathPoint:
     beta: jnp.ndarray
     metrics: dict = field(default_factory=dict)
     screen: dict = field(default_factory=dict)   # active-set telemetry
+    # engine.STATUS_* code of the solve that produced this point (0 = OK;
+    # non-OK points carry the driver's degraded/skip decision in screen)
+    status: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return self.status == 0
 
 
 @dataclass
@@ -54,6 +61,20 @@ class PathResult:
     n_iters: np.ndarray          # (L,) int64
     metrics: List[dict] = field(default_factory=list)   # per-lambda eval
     screen: List[dict] = field(default_factory=list)    # active-set telemetry
+    # (L,) int64 engine.STATUS_* per point; None on results loaded from
+    # pre-status checkpoints (treated as all-OK)
+    status: Optional[np.ndarray] = None
+
+    @property
+    def statuses(self) -> np.ndarray:
+        """Per-point status codes, defaulting to all-OK for legacy data."""
+        if self.status is None:
+            return np.zeros(len(self), np.int64)
+        return self.status
+
+    @property
+    def all_ok(self) -> bool:
+        return bool(np.all(self.statuses == 0))
 
     # -- construction -------------------------------------------------------
 
@@ -70,6 +91,7 @@ class PathResult:
             n_iters=np.asarray([p.n_iters for p in pts], np.int64),
             metrics=[dict(p.metrics) for p in pts],
             screen=[dict(p.screen) for p in pts],
+            status=np.asarray([p.status for p in pts], np.int64),
         )
 
     # -- list back-compat ---------------------------------------------------
@@ -86,6 +108,7 @@ class PathResult:
             beta=self.betas[i],
             metrics=self.metrics[i] if self.metrics else {},
             screen=self.screen[i] if self.screen else {},
+            status=int(self.statuses[i]),
         )
 
     def __getitem__(self, i):
@@ -128,6 +151,7 @@ class PathResult:
             "n_iters": [int(v) for v in self.n_iters],
             "metrics": [_jsonable(d) for d in self.metrics],
             "screen": [_jsonable(d) for d in self.screen],
+            "status": [int(v) for v in self.statuses],
             "p": int(self.betas.shape[1]) if self.betas.ndim == 2 else 0,
             "dtype": str(self.betas.dtype),
         }
@@ -158,6 +182,9 @@ class PathResult:
             n_iters=np.asarray(meta["n_iters"], np.int64),
             metrics=list(meta["metrics"]),
             screen=list(meta["screen"]),
+            # pre-status checkpoints load as status=None (treated all-OK)
+            status=(np.asarray(meta["status"], np.int64)
+                    if "status" in meta else None),
         )
 
 

@@ -1,5 +1,7 @@
 from repro.checkpoint.checkpointer import (  # noqa: F401
+    CheckpointCorruption,
     load_pytree,
     read_meta,
     save_pytree,
+    verify_payload,
 )

@@ -1,7 +1,21 @@
 """Dependency-free pytree checkpointer (no orbax in this environment).
 
-Layout: <dir>/manifest.json  (treedef + leaf paths + dtypes/shapes)
+Layout: <dir>/manifest.json  (treedef + leaf paths + dtypes/shapes + CRC)
         <dir>/arrays.npz     (leaf arrays keyed by sanitized path)
+
+Durability contract (PR 8):
+
+* **Atomic publish.** Both files are written to a same-directory temp
+  name and ``os.replace``d into place — a reader never observes a
+  partially written file. The payload lands first and the manifest last,
+  so the manifest acts as the commit marker: a crash between the two
+  renames leaves the *previous* manifest paired with a new payload,
+  which the CRC check below rejects rather than half-loads.
+* **Integrity.** The manifest records ``payload_bytes`` and a CRC-32 of
+  the payload; :func:`load_pytree` and :func:`verify_payload` re-hash
+  before deserializing and raise :class:`CheckpointCorruption` on any
+  mismatch (bit flip, truncation, torn write). Manifests written before
+  this contract (no ``crc32`` key) still load, unverified.
 
 Restore is sharding-aware: pass ``shardings`` (a matching pytree of
 NamedSharding / PartitionSpec under a mesh context) to place leaves as they
@@ -10,13 +24,25 @@ stream per-shard files, noted in DESIGN.md.
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
+import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_PAYLOAD = "arrays.npz"
+_MANIFEST = "manifest.json"
+
+
+class CheckpointCorruption(RuntimeError):
+    """The checkpoint on disk fails its integrity contract (CRC or size
+    mismatch, unreadable payload, missing files). Callers that keep a
+    last-good checkpoint should catch this and roll back to it."""
 
 
 def _keys(tree):
@@ -25,12 +51,36 @@ def _keys(tree):
     return flat, treedef, names
 
 
+_tmp_seq = itertools.count()
+
+
+def _write_atomic(path: str, data: bytes) -> None:
+    """Same-directory temp write + ``os.replace`` (atomic on POSIX).
+
+    The temp name is unique per process, thread AND call, so concurrent
+    writers never tear each other's staging file — each rename publishes
+    one writer's complete bytes (last rename wins)."""
+    tmp = (f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+           f".{next(_tmp_seq)}")
+    try:
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
 def save_pytree(tree: Any, directory: str, *, step: Optional[int] = None,
                 meta: Optional[dict] = None) -> str:
     """``meta`` is an optional JSON-serializable side channel stored in the
     manifest (read back via :func:`read_meta`) — for the non-array context
     a checkpoint consumer needs to rebuild itself (e.g. the per-lambda
     telemetry of a persisted regularization path)."""
+    import io
+
     os.makedirs(directory, exist_ok=True)
     flat, _, names = _keys(tree)
     arrays = {}
@@ -47,23 +97,78 @@ def save_pytree(tree: Any, directory: str, *, step: Optional[int] = None,
         manifest["leaves"].append(
             {"path": name, "key": key, "dtype": dtype_name, "shape": list(arr.shape)}
         )
-    np.savez(os.path.join(directory, "arrays.npz"), **arrays)
-    with open(os.path.join(directory, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    payload = buf.getvalue()
+    manifest["payload_bytes"] = len(payload)
+    manifest["crc32"] = zlib.crc32(payload)
+    # payload first, manifest last: the manifest rename is the commit.
+    _write_atomic(os.path.join(directory, _PAYLOAD), payload)
+    _write_atomic(os.path.join(directory, _MANIFEST),
+                  json.dumps(manifest, indent=1).encode())
     return directory
+
+
+def _read_manifest(directory: str) -> dict:
+    path = os.path.join(directory, _MANIFEST)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        raise CheckpointCorruption(f"missing manifest: {path}")
+    except json.JSONDecodeError as err:
+        raise CheckpointCorruption(f"unreadable manifest {path}: {err}")
+
+
+def verify_payload(directory: str) -> bool:
+    """Re-hash the payload against the manifest's CRC-32.
+
+    Returns True when verified, False when the manifest predates the
+    integrity contract (nothing to check against). Raises
+    :class:`CheckpointCorruption` on size/CRC mismatch or a missing
+    payload file.
+    """
+    manifest = _read_manifest(directory)
+    if "crc32" not in manifest:
+        return False
+    path = os.path.join(directory, _PAYLOAD)
+    try:
+        with open(path, "rb") as f:
+            payload = f.read()
+    except FileNotFoundError:
+        raise CheckpointCorruption(f"missing payload: {path}")
+    if len(payload) != manifest.get("payload_bytes"):
+        raise CheckpointCorruption(
+            f"payload size mismatch in {directory}: "
+            f"{len(payload)} bytes on disk vs "
+            f"{manifest.get('payload_bytes')} in manifest (truncated write?)")
+    crc = zlib.crc32(payload)
+    if crc != manifest["crc32"]:
+        raise CheckpointCorruption(
+            f"payload CRC mismatch in {directory}: "
+            f"{crc:#010x} on disk vs {manifest['crc32']:#010x} in manifest")
+    return True
 
 
 def read_meta(directory: str) -> Optional[dict]:
     """The ``meta`` dict stored by :func:`save_pytree`, or None."""
-    with open(os.path.join(directory, "manifest.json")) as f:
-        return json.load(f).get("meta")
+    return _read_manifest(directory).get("meta")
 
 
 def load_pytree(directory: str, like: Any, *, shardings: Any = None) -> Any:
-    """Restore into the structure of ``like`` (paths must match)."""
-    with open(os.path.join(directory, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(directory, "arrays.npz"))
+    """Restore into the structure of ``like`` (paths must match).
+
+    Verifies payload integrity first (see :func:`verify_payload`); a
+    damaged checkpoint raises :class:`CheckpointCorruption` before any
+    array is deserialized.
+    """
+    manifest = _read_manifest(directory)
+    verify_payload(directory)
+    try:
+        data = np.load(os.path.join(directory, _PAYLOAD))
+    except (OSError, ValueError) as err:
+        raise CheckpointCorruption(
+            f"unreadable payload in {directory}: {err}")
     by_path = {e["path"]: data[e["key"]] for e in manifest["leaves"]}
 
     flat, treedef, names = _keys(like)

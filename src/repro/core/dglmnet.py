@@ -97,10 +97,21 @@ class FitResult:
     alpha_history: List[float] = field(default_factory=list)
     unit_step_frac: float = 0.0
     converged: bool = False
+    # engine.STATUS_* code; non-OK means the solve tripped a guardrail and
+    # beta/f are the last certified iterate, not the final proposed step
+    status: int = 0
 
     @property
     def nnz(self) -> int:
         return int(jnp.sum(jnp.abs(self.beta) > 0))
+
+    @property
+    def status_name(self) -> str:
+        return engine.status_name(self.status)
+
+    @property
+    def ok(self) -> bool:
+        return self.status == engine.STATUS_OK
 
 
 def _pad_features(X, beta, num_blocks):
@@ -153,11 +164,7 @@ def _iteration(X, y, beta, m, lam, opts: DGLMNETOptions, w=None, z=None):
 dglmnet_iteration = jax.jit(_iteration, static_argnames=("opts",))
 
 
-@lru_cache(maxsize=64)
-def _solver_for(opts: DGLMNETOptions):
-    """One compiled while_loop program per options bundle (lam is traced,
-    so a whole regularization path reuses a single compilation)."""
-
+def _build_solver(opts: DGLMNETOptions, fault=None):
     def iteration(X, y, beta, m, lam, w, z):
         return _iteration(X, y, beta, m, lam, opts, w, z)
 
@@ -166,7 +173,27 @@ def _solver_for(opts: DGLMNETOptions):
         max_iters=opts.max_iters,
         rel_tol=opts.rel_tol,
         snap_tol=opts.snap_tol,
+        fault=fault,
     )
+
+
+@lru_cache(maxsize=64)
+def _cached_solver(opts: DGLMNETOptions):
+    return _build_solver(opts)
+
+
+def _solver_for(opts: DGLMNETOptions):
+    """One compiled while_loop program per options bundle (lam is traced,
+    so a whole regularization path reuses a single compilation). When a
+    ``repro.resilience`` fault plan arms an engine fault, an *uncached*
+    poisoned build is returned instead — fault programs never enter (or
+    evict from) the healthy cache."""
+    from repro.resilience import arm_engine_fault
+
+    fault = arm_engine_fault()
+    if fault is not None:
+        return _build_solver(opts, fault=fault)
+    return _cached_solver(opts)
 
 
 def fit(

@@ -334,24 +334,47 @@ def make_dglmnet_step(mesh: Mesh, opts: DGLMNETOptions, *, model_axis: str = "mo
     )
 
 
+def _build_solver(mesh: Mesh, opts: DGLMNETOptions, model_axis: str,
+                  *, sparse: bool, fault=None):
+    make_iter = (make_distributed_iteration_sparse if sparse
+                 else make_distributed_iteration)
+    return engine.make_solver(
+        make_iter(mesh, opts, model_axis=model_axis),
+        max_iters=opts.max_iters,
+        rel_tol=opts.rel_tol,
+        snap_tol=opts.snap_tol,
+        fault=fault,
+    )
+
+
 @lru_cache(maxsize=64)
+def _cached_solver(mesh: Mesh, opts: DGLMNETOptions, model_axis: str,
+                   sparse: bool):
+    return _build_solver(mesh, opts, model_axis, sparse=sparse)
+
+
 def _solver_for(mesh: Mesh, opts: DGLMNETOptions, model_axis: str):
-    return engine.make_solver(
-        make_distributed_iteration(mesh, opts, model_axis=model_axis),
-        max_iters=opts.max_iters,
-        rel_tol=opts.rel_tol,
-        snap_tol=opts.snap_tol,
-    )
+    """Cached mesh solver; an armed ``repro.resilience`` engine fault gets
+    an uncached poisoned build instead (fault programs never enter — or
+    evict from — the healthy cache)."""
+    from repro.resilience import arm_engine_fault
+
+    fault = arm_engine_fault()
+    if fault is not None:
+        return _build_solver(mesh, opts, model_axis, sparse=False,
+                             fault=fault)
+    return _cached_solver(mesh, opts, model_axis, False)
 
 
-@lru_cache(maxsize=64)
 def _solver_sparse_for(mesh: Mesh, opts: DGLMNETOptions, model_axis: str):
-    return engine.make_solver(
-        make_distributed_iteration_sparse(mesh, opts, model_axis=model_axis),
-        max_iters=opts.max_iters,
-        rel_tol=opts.rel_tol,
-        snap_tol=opts.snap_tol,
-    )
+    """Sparse-slab twin of :func:`_solver_for` (same fault-bypass rule)."""
+    from repro.resilience import arm_engine_fault
+
+    fault = arm_engine_fault()
+    if fault is not None:
+        return _build_solver(mesh, opts, model_axis, sparse=True,
+                             fault=fault)
+    return _cached_solver(mesh, opts, model_axis, True)
 
 
 @dataclass
@@ -368,10 +391,21 @@ class DistributedFitResult:
     unit_step_frac: float = 0.0
     converged: bool = False
     m: Optional[jnp.ndarray] = None
+    # engine.STATUS_* code; non-OK means the solve tripped a guardrail and
+    # beta/f are the last certified iterate, not the final proposed step
+    status: int = 0
 
     @property
     def nnz(self) -> int:
         return int(jnp.sum(jnp.abs(self.beta) > 0))
+
+    @property
+    def status_name(self) -> str:
+        return engine.status_name(self.status)
+
+    @property
+    def ok(self) -> bool:
+        return self.status == engine.STATUS_OK
 
 
 def fit_distributed(
@@ -414,6 +448,7 @@ def _finish(state, p: int, pad: int, verbose: bool,
         unit_step_frac=int(host.unit_steps) / max(it, 1),
         converged=bool(host.converged),
         m=state.m,
+        status=int(host.status),
     )
 
 

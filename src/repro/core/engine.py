@@ -40,12 +40,41 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.linesearch import f_alpha, line_search
+from repro.core.linesearch import (
+    MAX_BACKTRACKS,
+    LineSearchResult,
+    f_alpha,
+    line_search,
+)
 from repro.core.objective import l1_norm, objective
 from repro.kernels.ops import logistic_stats
 
 # Indirection point so tests can count the per-solve host transfers.
 device_get = jax.device_get
+
+# Typed failure status carried on device (SolverState.status, int32).
+# OK is 0 so a zeros-init carry starts healthy; the while-loop body
+# writes exactly one non-OK code (then stops), so precedence only matters
+# within a single tripped iteration: NONFINITE > STALLED > DIVERGED.
+STATUS_OK = 0
+STATUS_NONFINITE_OBJECTIVE = 1
+STATUS_LINESEARCH_STALLED = 2
+STATUS_DIVERGED = 3
+
+STATUS_NAMES = {
+    STATUS_OK: "OK",
+    STATUS_NONFINITE_OBJECTIVE: "NONFINITE_OBJECTIVE",
+    STATUS_LINESEARCH_STALLED: "LINESEARCH_STALLED",
+    STATUS_DIVERGED: "DIVERGED",
+}
+
+# Objectives here are NLL + lam*||beta||_1 >= 0; a step whose objective
+# exceeds this multiple of (f(beta0) + 1) is runaway, not line noise.
+_DIVERGE_FACTOR = 1e4
+
+
+def status_name(code: int) -> str:
+    return STATUS_NAMES.get(int(code), f"UNKNOWN({int(code)})")
 
 
 class SolverState(NamedTuple):
@@ -66,16 +95,46 @@ class SolverState(NamedTuple):
     f_hist: jnp.ndarray          # (max_iters + 1,), f_hist[0] = f(beta0)
     a_hist: jnp.ndarray          # (max_iters,), line-search alphas (pre-snap)
     unit_steps: jnp.ndarray      # int32, Armijo unit-step short-circuits
+    # int32 STATUS_* code; the default keeps pre-status constructors valid
+    # (a plain int leaf — no device allocation at import time)
+    status: jnp.ndarray = STATUS_OK
 
 
-def _advance(iteration_fn, data, y, beta, m, lam):
+_POISON = {"nan": float("nan"), "inf": float("inf")}
+
+
+def _advance(iteration_fn, data, y, beta, m, lam, *, fire=None, fault=None):
     """One outer step: fused working stats + subproblem + line search.
     Shared by the while-loop body and by :func:`make_step` (the
-    single-iteration public API)."""
+    single-iteration public API).
+
+    ``fault`` (a ``repro.resilience.EngineFault``-shaped object, static)
+    bakes a device-side poisoning into the program; ``fire`` is the traced
+    bool selecting the iteration it triggers on. Both default to None —
+    the healthy program is byte-identical to pre-fault builds.
+    """
+    if fault is not None and fault.kind == "margins":
+        m = jnp.where(fire, jnp.full_like(m, _POISON[fault.mode]), m)
     w, z, nll0 = logistic_stats(m, y)
     f0 = nll0 + lam * l1_norm(beta)
+    if fault is not None and fault.kind == "stats":
+        bad = _POISON[fault.mode]
+        w = jnp.where(fire, jnp.full_like(w, bad), w)
+        z = jnp.where(fire, jnp.full_like(z, bad), z)
     dbeta, dm, grad_dot = iteration_fn(data, y, beta, m, lam, w, z)
     res = line_search(m, dm, y, beta, dbeta, lam, grad_dot, f0=f0)
+    if fault is not None and fault.kind == "linesearch":
+        # An exhausted, strictly-worse line search: +1.0 dominates any ulp
+        # noise between f0 and the carry objective, so the stall guard's
+        # strict comparison always sees it.
+        res = LineSearchResult(
+            alpha=jnp.where(fire, jnp.float32(0.0), res.alpha),
+            f_new=jnp.where(fire, f0 + 1.0, res.f_new),
+            took_unit_step=jnp.logical_and(jnp.logical_not(fire),
+                                           res.took_unit_step),
+            backtracks=jnp.where(fire, jnp.int32(MAX_BACKTRACKS),
+                                 res.backtracks),
+        )
     return dbeta, dm, res
 
 
@@ -98,10 +157,22 @@ def make_solver(
     max_iters: int,
     rel_tol: float,
     snap_tol: float,
+    fault=None,
 ) -> Callable:
     """Builds ``solve(data, y, beta0, m0, lam) -> SolverState`` as one
     jitted program (outer loop = a single ``lax.while_loop``; ``lam`` is a
     traced operand so one compilation serves a whole regularization path).
+
+    Numerical guardrails run on the carry every iteration (no host sync):
+    a non-finite step objective, an exhausted line search that made the
+    objective strictly worse, or a runaway objective trips the matching
+    ``STATUS_*`` code, stops the loop, and freezes ``(beta, m, f, it)`` at
+    the last good iterate — the tripped step is never applied and never
+    enters the histories, so a consumer always gets the last finite beta.
+
+    ``fault`` (static; shaped like ``repro.resilience.EngineFault``) bakes
+    a deterministic device-side fault into this build — solver caches must
+    not serve fault builds (see the drivers' ``_solver_for``).
     """
     if max_iters < 1:
         raise ValueError(f"max_iters must be >= 1, got {max_iters}")
@@ -114,29 +185,54 @@ def make_solver(
         lam = jnp.asarray(lam, jnp.float32)
 
         def body(s: SolverState) -> SolverState:
-            dbeta, dm, res = _advance(iteration_fn, data, y, s.beta, s.m, lam)
             it = s.it + 1
+            fire = (jnp.equal(it, jnp.int32(fault.at_iter))
+                    if fault is not None else None)
+            dbeta, dm, res = _advance(iteration_fn, data, y, s.beta, s.m,
+                                      lam, fire=fire, fault=fault)
+            # Guardrails on the proposed step, before anything is applied.
+            nonfinite = jnp.logical_not(jnp.isfinite(res.f_new))
+            stalled = jnp.logical_and(res.backtracks >= MAX_BACKTRACKS,
+                                      res.f_new > s.f)
+            diverged = res.f_new > _DIVERGE_FACTOR * (s.f_hist[0] + 1.0)
+            status = jnp.where(
+                nonfinite, STATUS_NONFINITE_OBJECTIVE,
+                jnp.where(stalled, STATUS_LINESEARCH_STALLED,
+                          jnp.where(diverged, STATUS_DIVERGED, STATUS_OK)),
+            ).astype(jnp.int32)
+            tripped = status != STATUS_OK
+
             rel_dec = (s.f - res.f_new) / jnp.maximum(jnp.abs(s.f), 1e-12)
-            converged = rel_dec < rel_tol
-            done = jnp.logical_or(converged, it >= max_iters)
+            converged = jnp.logical_and(jnp.logical_not(tripped),
+                                        rel_dec < rel_tol)
+            done = jnp.logical_or(tripped,
+                                  jnp.logical_or(converged, it >= max_iters))
             # Mid-loop iterations apply the step; the stop iteration
             # stashes it for the snap-back epilogue (which overwrites the
-            # provisional f_hist entry written here).
+            # provisional f_hist entry written here). A tripped iteration
+            # applies nothing, counts nothing, and writes nothing: the
+            # history scatter index is pushed out of bounds (dropped), so
+            # telemetry only ever holds certified iterations.
             keep = jnp.logical_not(done)
+            idx_f = jnp.where(tripped, jnp.int32(max_iters + 1), it)
+            idx_a = jnp.where(tripped, jnp.int32(max_iters), it - 1)
             return SolverState(
                 beta=jnp.where(keep, s.beta + res.alpha * dbeta, s.beta),
                 m=jnp.where(keep, s.m + res.alpha * dm, s.m),
                 f=jnp.where(keep, res.f_new, s.f),
-                it=it,
+                it=jnp.where(tripped, s.it, it),
                 done=done,
                 converged=converged,
                 dbeta=dbeta,
                 dm=dm,
                 alpha=res.alpha,
                 f_new=res.f_new,
-                f_hist=s.f_hist.at[it].set(res.f_new),
-                a_hist=s.a_hist.at[it - 1].set(res.alpha),
-                unit_steps=s.unit_steps + res.took_unit_step.astype(jnp.int32),
+                f_hist=s.f_hist.at[idx_f].set(res.f_new),
+                a_hist=s.a_hist.at[idx_a].set(res.alpha),
+                unit_steps=s.unit_steps + jnp.logical_and(
+                    res.took_unit_step, jnp.logical_not(tripped)
+                ).astype(jnp.int32),
+                status=status,
             )
 
         init = SolverState(
@@ -153,6 +249,7 @@ def make_solver(
             f_hist=jnp.full((max_iters + 1,), jnp.nan, jnp.float32).at[0].set(f0),
             a_hist=jnp.full((max_iters,), jnp.nan, jnp.float32),
             unit_steps=jnp.int32(0),
+            status=jnp.int32(STATUS_OK),
         )
         s = jax.lax.while_loop(cond, body, init)
 
@@ -164,18 +261,26 @@ def make_solver(
         # is overwritten with the snapped alpha, and a snap that promotes a
         # fractional alpha to 1 counts as a unit step (the body only
         # counted the line search's own short-circuits).
+        #
+        # On a tripped status the stashed step is the poisoned one: every
+        # output selects the frozen carry via jnp.where (never a
+        # multiply-by-zero — 0 * NaN is NaN) and the history overwrite is
+        # dropped out of bounds, so the last certified entries survive.
+        ok = jnp.equal(s.status, STATUS_OK)
         f_unit = f_alpha(1.0, s.m, s.dm, y, s.beta, s.dbeta, lam)
-        snap = f_unit <= s.f_new * (1.0 + snap_tol) + 1e-12
+        snap = jnp.logical_and(ok, f_unit <= s.f_new * (1.0 + snap_tol) + 1e-12)
         alpha = jnp.where(snap, jnp.float32(1.0), s.alpha)
         f_fin = jnp.where(snap, f_unit, s.f_new)
         snapped_up = jnp.logical_and(snap, s.alpha != 1.0)
+        idx_f = jnp.where(ok, s.it, jnp.int32(max_iters + 1))
+        idx_a = jnp.where(ok, s.it - 1, jnp.int32(max_iters))
         return s._replace(
-            beta=s.beta + alpha * s.dbeta,
-            m=s.m + alpha * s.dm,
-            f=f_fin,
-            alpha=alpha,
-            f_hist=s.f_hist.at[s.it].set(f_fin),
-            a_hist=s.a_hist.at[s.it - 1].set(alpha),
+            beta=jnp.where(ok, s.beta + alpha * s.dbeta, s.beta),
+            m=jnp.where(ok, s.m + alpha * s.dm, s.m),
+            f=jnp.where(ok, f_fin, s.f),
+            alpha=jnp.where(ok, alpha, jnp.float32(0.0)),
+            f_hist=s.f_hist.at[idx_f].set(f_fin),
+            a_hist=s.a_hist.at[idx_a].set(alpha),
             unit_steps=s.unit_steps + snapped_up.astype(jnp.int32),
         )
 
@@ -184,9 +289,29 @@ def make_solver(
 
 def fetch(state: SolverState):
     """The solve's single device->host transfer: one ``device_get`` of the
-    whole final state. Returns (host_state, trimmed histories)."""
+    whole final state. Returns (host_state, trimmed histories).
+
+    Histories are validated against the device-side ``status``: an OK
+    solve with a non-finite history row is a guardrail bug and raises;
+    a tripped solve trims any non-finite tail (nothing past the last
+    certified iterate is ever reported as a real iteration).
+    """
+    import math
+
     host = device_get(state)
     it = int(host.it)
     f_hist = [float(v) for v in host.f_hist[: it + 1]]
     a_hist = [float(v) for v in host.a_hist[:it]]
+    status = int(host.status)
+    if status == STATUS_OK:
+        bad = [k for k, v in enumerate(f_hist) if not math.isfinite(v)]
+        if bad:
+            raise RuntimeError(
+                f"engine invariant violated: status=OK but f_hist has "
+                f"non-finite entries at iterations {bad} — the guardrails "
+                f"should have tripped")
+    else:
+        while len(f_hist) > 1 and not math.isfinite(f_hist[-1]):
+            f_hist.pop()
+        a_hist = a_hist[: max(len(f_hist) - 1, 0)]
     return host, f_hist, a_hist

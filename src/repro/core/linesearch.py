@@ -25,6 +25,11 @@ from repro.core.objective import l1_norm, neg_log_likelihood
 
 GOLD = 0.6180339887498949
 
+# Backtracking budget (paper's b = 0.5 halving): exhausting it without an
+# accepted step is the engine's LINESEARCH_STALLED trip-wire, so the
+# constant is shared rather than duplicated at the guard site.
+MAX_BACKTRACKS = 30
+
 
 class LineSearchResult(NamedTuple):
     alpha: jnp.ndarray
@@ -80,7 +85,7 @@ def line_search(
     *,
     f0=None,           # precomputed f(alpha=0) (the engine's fused-stats
                        # pass already holds NLL(m)); None -> evaluate here
-    max_backtracks: int = 30,
+    max_backtracks: int = MAX_BACKTRACKS,
     b: float = 0.5,
     sigma: float = 0.01,
     gamma: float = 0.0,

@@ -96,6 +96,7 @@ def smoke_check(est, store, scorer, batch, n_live: int, path) -> None:
         beta = path.betas[l]
         if batch.p_pad != beta.shape[0]:
             beta = jnp.pad(beta, (0, batch.p_pad - beta.shape[0]))
+        # allow[nonfinite-guard]: decision_function is the reference oracle; the served side of the bit-equality IS the guarded path
         ref = np.asarray(est.decision_function(design, beta=beta))[:n_live]
         got, _ = scorer.score(batch, np.full(n_live, path.lambdas[l]))
         if not np.array_equal(got, ref):

@@ -1,0 +1,38 @@
+"""repro.resilience — fault injection, typed failure status, recovery.
+
+The paper's premise is clusters big enough that partial failure, numeric
+blowup and overload are the norm; this package is the robustness layer
+the solver/serve stack consults:
+
+* :mod:`~repro.resilience.inject` — a deterministic, seeded
+  fault-injection harness (NaN/Inf poisoning of margins or working stats
+  at a chosen outer iteration, forced line-search failure, checkpoint
+  corruption, kill-after-N-path-points, serve latency/overload knobs),
+  driveable from tests and ``python -m repro.launch.chaos_glm``;
+* :mod:`~repro.resilience.retry` — bounded exponential-backoff retry for
+  the serve loop's swap/load edges;
+* :mod:`~repro.resilience.progress` — the per-lambda progress store
+  behind ``LogisticL1.path(checkpoint_every=, resume_from=)``: rotated
+  slots, atomic pointer update, roll-back to last-good on corruption.
+
+The numerical guardrails themselves live on the solver carry
+(``core.engine``: the device-resident ``status`` code) — this package
+never imports JAX, so the chaos harness loads even where the runtime
+can't.
+"""
+from repro.resilience.inject import (  # noqa: F401
+    EngineFault,
+    FaultPlan,
+    InjectedFault,
+    InjectedKill,
+    active_plan,
+    arm_engine_fault,
+    corrupt_checkpoint,
+    inject_faults,
+    maybe_kill,
+    serve_delay,
+    take_load_failure,
+    take_swap_failure,
+)
+from repro.resilience.progress import PathProgress  # noqa: F401
+from repro.resilience.retry import RetriesExhausted, retry_call  # noqa: F401

@@ -1,0 +1,242 @@
+"""Deterministic, seeded fault injection.
+
+One module owns every fault the stack can be asked to survive, so a chaos
+run is a single :class:`FaultPlan` armed around the code under test:
+
+    with inject_faults(FaultPlan(engine=EngineFault("margins", at_iter=3))):
+        res = est.fit(X, y, lam)
+    assert res.status == engine.STATUS_NONFINITE_OBJECTIVE
+
+Hook protocol — the production layers *consult* this module, they never
+depend on it being armed:
+
+* ``arm_engine_fault()`` — the solver factories (``core.dglmnet`` /
+  ``core.distributed`` ``_solver_for``) call this once per solver
+  acquisition; a non-None :class:`EngineFault` is baked into an uncached
+  solver build whose while-loop body poisons margins/working stats (or
+  forces a line-search stall) at ``at_iter``, on device. With no plan
+  armed the call is a cheap None and the bounded solver caches serve the
+  hot path byte-identically.
+* ``maybe_kill(points_done)`` — the path driver calls this after each
+  emitted point (post-checkpoint); raises :class:`InjectedKill` when the
+  plan says so, simulating a mid-path process death.
+* ``serve_delay()`` / ``take_swap_failure()`` / ``take_load_failure()``
+  — the serve layer's latency and transient-failure knobs (the latter
+  two are consumable counters, so retry-with-backoff paths can be
+  exercised deterministically).
+* :func:`corrupt_checkpoint` — host-side, deterministic corruption of a
+  ``repro.checkpoint`` directory (bit flip / truncation / meta drop).
+
+Everything here is stdlib-only: the harness must import (and the hooks
+answer None/no-op) even where JAX cannot.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Optional
+
+
+class InjectedFault(RuntimeError):
+    """A failure raised (not computed) by the injection harness."""
+
+
+class InjectedKill(InjectedFault):
+    """Simulated process death (``FaultPlan.kill_after_points``)."""
+
+
+#: EngineFault kinds: what gets poisoned, at outer iteration ``at_iter``
+ENGINE_FAULT_KINDS = ("margins", "stats", "linesearch")
+
+
+@dataclass(frozen=True)
+class EngineFault:
+    """A device-side fault baked into one solver build.
+
+    ``kind``: ``"margins"`` poisons the margin cache entering the fused
+    working-stats pass; ``"stats"`` poisons (w, z) entering the
+    subproblem; ``"linesearch"`` forces a no-progress, backtrack-exhausted
+    line-search result. ``mode`` picks the poison value (``"nan"`` or
+    ``"inf"``). ``at_iter`` is the 1-based outer iteration that fires.
+    """
+
+    kind: str
+    at_iter: int = 1
+    mode: str = "nan"
+
+    def __post_init__(self):
+        if self.kind not in ENGINE_FAULT_KINDS:
+            raise ValueError(
+                f"unknown EngineFault kind {self.kind!r}: expected one of "
+                f"{ENGINE_FAULT_KINDS}")
+        if self.mode not in ("nan", "inf"):
+            raise ValueError(f"mode must be 'nan' or 'inf', got {self.mode!r}")
+        if self.at_iter < 1:
+            raise ValueError(f"at_iter must be >= 1, got {self.at_iter}")
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """The full, deterministic description of one chaos scenario.
+
+    ``engine_fires`` bounds how many solver acquisitions arm ``engine``
+    (None = every one while the plan is active) — ``engine_fires=1``
+    poisons exactly the next solve, so recovery paths (the path driver's
+    degradation ladder) see a *transient* fault. ``fail_swaps`` /
+    ``fail_loads`` are consumable counters making the next N
+    ``PathStore.swap`` / checkpoint loads raise :class:`InjectedFault`
+    (exercising retry-with-backoff). ``serve_latency_s`` sleeps every
+    scorer dispatch by that much.
+    """
+
+    seed: int = 0
+    engine: Optional[EngineFault] = None
+    engine_fires: Optional[int] = None
+    kill_after_points: Optional[int] = None
+    serve_latency_s: float = 0.0
+    fail_swaps: int = 0
+    fail_loads: int = 0
+
+
+class _ActivePlan:
+    """Armed plan + its mutable consumable counters."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.engine_left = plan.engine_fires
+        self.swaps_left = plan.fail_swaps
+        self.loads_left = plan.fail_loads
+
+
+_LOCK = threading.Lock()
+_ACTIVE: Optional[_ActivePlan] = None
+
+
+@contextmanager
+def inject_faults(plan: FaultPlan):
+    """Arm ``plan`` for the dynamic extent of the block (process-global:
+    the solver factories and serve hooks consult it from any thread).
+    Nesting is an error — one scenario at a time keeps runs deterministic.
+    """
+    global _ACTIVE
+    with _LOCK:
+        if _ACTIVE is not None:
+            raise RuntimeError("a FaultPlan is already armed (no nesting)")
+        _ACTIVE = _ActivePlan(plan)
+    try:
+        yield plan
+    finally:
+        with _LOCK:
+            _ACTIVE = None
+
+
+def active_plan() -> Optional[FaultPlan]:
+    a = _ACTIVE
+    return None if a is None else a.plan
+
+
+def arm_engine_fault() -> Optional[EngineFault]:
+    """The engine fault to bake into the next solver build, consuming one
+    of ``engine_fires`` — or None (no plan / fault exhausted)."""
+    with _LOCK:
+        a = _ACTIVE
+        if a is None or a.plan.engine is None:
+            return None
+        if a.engine_left is None:
+            return a.plan.engine
+        if a.engine_left <= 0:
+            return None
+        a.engine_left -= 1
+        return a.plan.engine
+
+
+def maybe_kill(points_done: int) -> None:
+    """Raise :class:`InjectedKill` when the armed plan says the process
+    dies after ``points_done`` path points. No-op otherwise."""
+    a = _ACTIVE
+    if (a is not None and a.plan.kill_after_points is not None
+            and points_done >= a.plan.kill_after_points):
+        raise InjectedKill(
+            f"injected kill after {points_done} path points "
+            f"(plan: kill_after_points={a.plan.kill_after_points})")
+
+
+def serve_delay() -> float:
+    """Sleep the armed plan's serve latency; returns the seconds slept."""
+    a = _ACTIVE
+    if a is None or a.plan.serve_latency_s <= 0.0:
+        return 0.0
+    time.sleep(a.plan.serve_latency_s)
+    return a.plan.serve_latency_s
+
+
+def take_swap_failure() -> bool:
+    """Consume one injected ``PathStore.swap`` failure, if any remain."""
+    with _LOCK:
+        a = _ACTIVE
+        if a is None or a.swaps_left <= 0:
+            return False
+        a.swaps_left -= 1
+        return True
+
+
+def take_load_failure() -> bool:
+    """Consume one injected checkpoint-load failure, if any remain."""
+    with _LOCK:
+        a = _ACTIVE
+        if a is None or a.loads_left <= 0:
+            return False
+        a.loads_left -= 1
+        return True
+
+
+# ---------------------------------------------------------------------------
+# host-side checkpoint corruption (deterministic)
+# ---------------------------------------------------------------------------
+
+CORRUPTION_MODES = ("bitflip", "truncate", "drop-meta")
+
+
+def corrupt_checkpoint(directory: str, mode: str = "bitflip", *,
+                       seed: int = 0) -> str:
+    """Deterministically damage a ``repro.checkpoint`` directory.
+
+    ``bitflip`` flips one bit of the array payload at a seed-derived
+    offset (CRC-detectable); ``truncate`` keeps only the first half of
+    the payload (length-mismatch-detectable); ``drop-meta`` removes the
+    manifest's ``meta`` side channel (consumers that need it must fail
+    typed, not KeyError). Returns a description of what was done.
+    """
+    payload = os.path.join(directory, "arrays.npz")
+    manifest = os.path.join(directory, "manifest.json")
+    if mode == "bitflip":
+        with open(payload, "rb") as fh:
+            data = bytearray(fh.read())
+        if not data:
+            raise ValueError(f"{payload} is empty — nothing to flip")
+        off = seed % len(data)
+        data[off] ^= 0x01
+        with open(payload, "wb") as fh:
+            fh.write(bytes(data))
+        return f"flipped bit 0 of byte {off}/{len(data)} in {payload}"
+    if mode == "truncate":
+        size = os.path.getsize(payload)
+        with open(payload, "rb") as fh:
+            head = fh.read(size // 2)
+        with open(payload, "wb") as fh:
+            fh.write(head)
+        return f"truncated {payload} from {size} to {size // 2} bytes"
+    if mode == "drop-meta":
+        with open(manifest) as fh:
+            doc = json.load(fh)
+        doc.pop("meta", None)
+        with open(manifest, "w") as fh:
+            json.dump(doc, fh, indent=1)
+        return f"dropped the meta side channel from {manifest}"
+    raise ValueError(
+        f"unknown corruption mode {mode!r}: expected one of "
+        f"{CORRUPTION_MODES}")

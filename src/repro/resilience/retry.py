@@ -1,0 +1,65 @@
+"""Bounded exponential-backoff retry for the serve loop's fragile edges.
+
+``PathStore.swap`` and checkpoint loads are the two places the serving
+stack crosses a boundary that can fail transiently (device OOM during a
+build-then-publish, a checkpoint directory mid-rotation). Wrapping them
+in :func:`retry_call` keeps the failure typed and bounded instead of
+letting one transient kill the serve loop.
+
+Stdlib only; the sleep is injectable so tests run at full speed.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional, Tuple, Type, TypeVar
+
+T = TypeVar("T")
+
+
+class RetriesExhausted(RuntimeError):
+    """All attempts failed; ``__cause__`` is the last underlying error."""
+
+    def __init__(self, attempts: int, last: BaseException):
+        super().__init__(
+            f"gave up after {attempts} attempts: "
+            f"{type(last).__name__}: {last}")
+        self.attempts = attempts
+        self.last = last
+
+
+def retry_call(
+    fn: Callable[[], T],
+    *,
+    attempts: int = 3,
+    base_delay_s: float = 0.05,
+    max_delay_s: float = 1.0,
+    retry_on: Tuple[Type[BaseException], ...] = (RuntimeError, OSError),
+    sleep: Optional[Callable[[float], None]] = None,
+    on_retry: Optional[Callable[[int, BaseException], None]] = None,
+) -> T:
+    """Call ``fn()`` with up to ``attempts`` tries and exponential backoff.
+
+    Delays run ``base_delay_s * 2**k`` capped at ``max_delay_s``. Only
+    exceptions in ``retry_on`` are retried; anything else propagates
+    immediately (a typed rejection like ``Overloaded`` must not be
+    retried into a success). ``on_retry(attempt_index, error)`` fires
+    before each backoff sleep so callers can count retries in telemetry.
+    Raises :class:`RetriesExhausted` (chaining the last error) when every
+    attempt fails.
+    """
+    if attempts < 1:
+        raise ValueError(f"attempts must be >= 1, got {attempts}")
+    do_sleep = time.sleep if sleep is None else sleep
+    last: Optional[BaseException] = None
+    for k in range(attempts):
+        try:
+            return fn()
+        except retry_on as err:
+            last = err
+            if k + 1 >= attempts:
+                break
+            if on_retry is not None:
+                on_retry(k, err)
+            do_sleep(min(base_delay_s * (2.0 ** k), max_delay_s))
+    assert last is not None
+    raise RetriesExhausted(attempts, last) from last

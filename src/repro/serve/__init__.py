@@ -10,20 +10,37 @@ certified regularization path); this package serves it:
   ingestion packing request batches into the training kernels' by-feature
   slab layout;
 * :class:`RequestBatcher` — accumulate/drain batching with power-of-two
-  shape classes;
+  shape classes, a bounded pending queue (:class:`Overloaded` admission
+  control) and per-request deadlines shed at drain;
 * :class:`PathScorer` — one jitted ``slab_path_spmv`` dispatch per batch,
   each request row picking its own lambda operating point on device;
-  scores bit-identical to ``LogisticL1.decision_function``.
+  scores bit-identical to ``LogisticL1.decision_function``. Non-finite
+  scores quarantine the published version and pin the store back to its
+  last-good snapshot (:class:`NonFiniteScores` only if that fails too).
 
-Entry point: ``python -m repro.launch.serve_glm``.
+Typed failure surface: :class:`~repro.serve.ingest.InvalidRequest`
+(garbage in), :class:`Overloaded` (queue full), :class:`NonFiniteScores`
+(poisoned coefficients) — the serve loop counts each instead of dying.
+
+Entry points: ``python -m repro.launch.serve_glm`` (serving),
+``python -m repro.launch.chaos_glm`` (fault drills).
 """
-from repro.serve.batcher import RequestBatcher, batch_capacity  # noqa: F401
+from repro.serve.batcher import (  # noqa: F401
+    Overloaded,
+    RequestBatcher,
+    batch_capacity,
+)
 from repro.serve.ingest import (  # noqa: F401
+    InvalidRequest,
     PackedBatch,
     encode_request,
     hash_token,
     k_capacity,
     pack_requests,
 )
-from repro.serve.scoring import PathScorer, make_path_margins  # noqa: F401
+from repro.serve.scoring import (  # noqa: F401
+    NonFiniteScores,
+    PathScorer,
+    make_path_margins,
+)
 from repro.serve.store import PathStore, StoreSnapshot  # noqa: F401

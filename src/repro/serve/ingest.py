@@ -23,6 +23,7 @@ serving process compiles a handful of programs, not one per batch.
 """
 from __future__ import annotations
 
+import math
 import zlib
 from dataclasses import dataclass
 from typing import Iterable, Mapping, Sequence, Tuple, Union
@@ -30,6 +31,13 @@ from typing import Iterable, Mapping, Sequence, Tuple, Union
 import numpy as np
 
 Request = Union[Mapping[str, float], Iterable[Tuple[str, float]]]
+
+
+class InvalidRequest(ValueError):
+    """A request that can never score correctly: non-finite feature
+    values, or hashed indices outside the store's feature axis. Typed (a
+    ``ValueError`` subclass, so pre-existing handlers still catch it) so
+    the serve loop can count rejections instead of packing garbage."""
 
 
 def hash_token(token: str, p: int) -> int:
@@ -48,8 +56,14 @@ def encode_request(request: Request, p: int) -> Tuple[np.ndarray, np.ndarray]:
     items = request.items() if isinstance(request, Mapping) else request
     acc: dict = {}
     for token, value in sorted(items, key=lambda kv: kv[0]):
+        v = float(value)
+        if not math.isfinite(v):
+            raise InvalidRequest(
+                f"non-finite value {v!r} for token {token!r}: refusing to "
+                f"encode (a single NaN would poison the whole scoring batch)"
+            )
         j = hash_token(token, p)
-        acc[j] = acc.get(j, 0.0) + float(value)
+        acc[j] = acc.get(j, 0.0) + v
     idx = np.asarray(sorted(j for j in acc if acc[j] != 0.0), np.int64)
     val = np.asarray([acc[j] for j in idx], np.float32)
     return idx, val
@@ -137,7 +151,7 @@ def pack_requests(
         feats = rows = np.zeros(0, np.int64)
         vals = np.zeros(0, np.float32)
     if feats.size and (feats.min() < 0 or feats.max() >= p):
-        raise ValueError(f"hashed index out of range [0, {p})")
+        raise InvalidRequest(f"hashed index out of range [0, {p})")
 
     shard = rows // max(n_loc, 1)
     loc = rows - shard * n_loc

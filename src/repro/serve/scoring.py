@@ -28,8 +28,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.resilience import serve_delay
 from repro.serve.ingest import PackedBatch
 from repro.serve.store import PathStore, StoreSnapshot
+
+
+class NonFiniteScores(RuntimeError):
+    """Every published snapshot the scorer tried produced NaN/Inf scores
+    for this batch. Raised only after the store has been pinned back to
+    its last-good snapshot (when one existed) and the batch retried — so
+    a caller seeing this knows rollback did not help and the *batch*
+    itself is suspect."""
 
 
 @partial(jax.jit, static_argnames=("n_loc",))
@@ -114,25 +123,44 @@ class PathScorer:
         Returns ``(scores, version)``: ``scores`` are the ``(n_live,)``
         margins x_i^T beta_{lam_i} (feed ``jax.nn.sigmoid`` for
         probabilities), ``version`` the store version used for every row.
+
+        Non-finite guard: scores cross to host here anyway (the one
+        device->host hop of the serve loop), so they are checked before
+        being returned. A snapshot that yields NaN/Inf is quarantined —
+        the store pins back to its last-good snapshot and the batch is
+        rescored against that — and only if no snapshot survives does
+        :class:`NonFiniteScores` escape. Requests never see poison.
         """
-        snap = self.store.snapshot          # the one read — never re-read
         lams = np.asarray(lams, np.float64).reshape(-1)
         if lams.shape[0] != batch.n_live:
             raise ValueError(
                 f"{lams.shape[0]} lambdas for {batch.n_live} requests")
-        if batch.p != snap.p:
-            raise ValueError(
-                f"batch hashed to p={batch.p} but the store serves "
-                f"p={snap.p}")
-        if batch.p_pad != snap.p_pad:
-            raise ValueError(
-                f"batch feature padding {batch.p_pad} != store padding "
-                f"{snap.p_pad} — pack with pad_p_to=store.pad_p_to")
-        lam_idx = np.zeros(batch.batch_cap, np.int32)
-        if batch.n_live:
-            lam_idx[:batch.n_live] = snap.indices_of(lams)
-        scores = self._dispatch(batch, lam_idx, snap)
-        return np.asarray(scores)[:batch.n_live], snap.version
+        while True:
+            snap = self.store.snapshot      # one read per attempt
+            if batch.p != snap.p:
+                raise ValueError(
+                    f"batch hashed to p={batch.p} but the store serves "
+                    f"p={snap.p}")
+            if batch.p_pad != snap.p_pad:
+                raise ValueError(
+                    f"batch feature padding {batch.p_pad} != store padding "
+                    f"{snap.p_pad} — pack with pad_p_to=store.pad_p_to")
+            # lambdas resolve against the snapshot actually scored with
+            lam_idx = np.zeros(batch.batch_cap, np.int32)
+            if batch.n_live:
+                lam_idx[:batch.n_live] = snap.indices_of(lams)
+            serve_delay()                   # chaos latency injection point
+            scores = np.asarray(self._dispatch(batch, lam_idx, snap))
+            live = scores[:batch.n_live]
+            if np.all(np.isfinite(live)):
+                return live, snap.version
+            # rollback-and-retry: each quarantine() retires one version,
+            # so the loop is bounded by the (finite) rollback chain
+            if not self.store.quarantine(snap.version):
+                raise NonFiniteScores(
+                    f"non-finite scores from path version {snap.version} "
+                    f"and no last-good snapshot left to pin to"
+                )
 
     def _dispatch(self, batch: PackedBatch, lam_idx: np.ndarray,
                   snap: StoreSnapshot):

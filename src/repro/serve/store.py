@@ -27,6 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.types import PathResult
+from repro.resilience import InjectedFault, retry_call, take_load_failure, \
+    take_swap_failure
 
 
 @dataclass(frozen=True)
@@ -85,7 +87,9 @@ class PathStore:
         self.mesh = mesh
         self.tile = tile
         self._snap: Optional[StoreSnapshot] = None
+        self._prev: Optional[StoreSnapshot] = None   # last-good fallback
         self._version = 0
+        self.quarantined: list = []   # versions rolled back by quarantine()
         if result is not None:
             self.swap(result)
 
@@ -111,7 +115,7 @@ class PathStore:
 
     # -- publish ------------------------------------------------------------
 
-    def swap(self, result: PathResult) -> StoreSnapshot:
+    def swap(self, result: PathResult, *, attempts: int = 3) -> StoreSnapshot:
         """Atomically publish a new path version.
 
         The new stack is built and placed on device(s) BEFORE the snapshot
@@ -119,17 +123,31 @@ class PathStore:
         materialized version (the flip is one reference assignment —
         atomic under the GIL). In-flight batches holding the previous
         snapshot are unaffected.
+
+        Transient build/placement failures (device OOM races, injected
+        chaos faults) are retried with exponential backoff up to
+        ``attempts`` times; the store keeps serving the current snapshot
+        throughout — a failed swap never leaves it empty or half-built.
+        Validation errors (empty path, feature-space mismatch) are not
+        retried.
         """
         if len(result) == 0:
             raise ValueError("cannot publish an empty path")
-        betas = jnp.asarray(result.betas, jnp.float32)
-        p = int(betas.shape[1])
+        p = int(result.betas.shape[1])
         snap = self._snap
         if snap is not None and p != snap.p:
             raise ValueError(
                 f"new path has p={p} but the store serves p={snap.p} — "
                 f"a feature-space change needs a new store"
             )
+        return retry_call(lambda: self._publish(result, p),
+                          attempts=attempts, base_delay_s=0.01)
+
+    def _publish(self, result: PathResult, p: int) -> StoreSnapshot:
+        """One build-then-flip attempt (the retryable unit of :meth:`swap`)."""
+        if take_swap_failure():
+            raise InjectedFault("injected PathStore.swap failure")
+        betas = jnp.asarray(result.betas, jnp.float32)
         pad = (-p) % self.pad_p_to
         if pad:
             betas = jnp.pad(betas, ((0, 0), (0, pad)))
@@ -145,14 +163,49 @@ class PathStore:
         new = StoreSnapshot(version=self._version,
                             lambdas=np.asarray(result.lambdas, np.float64),
                             betas=betas, p=p)
+        self._prev = self._snap       # keep last-good for quarantine()
         self._snap = new              # the atomic publish
         return new
+
+    # -- rollback -----------------------------------------------------------
+
+    def quarantine(self, version: int) -> bool:
+        """Pin the store back to the previous snapshot if ``version`` is
+        the one currently published.
+
+        The scorer's non-finite guard calls this when a published version
+        produces NaN/Inf scores: the store reverts to the last-good
+        snapshot (one reference assignment, same atomicity as swap) and
+        records the bad version in :attr:`quarantined`. Returns whether a
+        rollback happened — False when ``version`` is already superseded
+        (a newer swap won the race) or there is no previous snapshot to
+        fall back to.
+        """
+        if (self._snap is not None and self._snap.version == version
+                and self._prev is not None):
+            self._snap = self._prev
+            self._prev = None         # don't ping-pong back to the bad one
+            self.quarantined.append(version)
+            return True
+        return False
 
     # -- persistence --------------------------------------------------------
 
     @classmethod
-    def from_checkpoint(cls, directory: str, *, mesh=None,
-                        tile: int = 128) -> "PathStore":
+    def from_checkpoint(cls, directory: str, *, mesh=None, tile: int = 128,
+                        attempts: int = 3) -> "PathStore":
         """Fit-once/serve-many: load a ``PathResult.save`` checkpoint and
-        publish it (the serving process needs no training code or data)."""
-        return cls(PathResult.load(directory), mesh=mesh, tile=tile)
+        publish it (the serving process needs no training code or data).
+
+        The load is retried with backoff (transient filesystem errors and
+        injected chaos faults); persistent corruption still surfaces as
+        :class:`~repro.checkpoint.CheckpointCorruption` after ``attempts``
+        tries, wrapped in ``RetriesExhausted`` with the cause chained.
+        """
+        def _load() -> PathResult:
+            if take_load_failure():
+                raise InjectedFault("injected checkpoint-load failure")
+            return PathResult.load(directory)
+
+        return cls(retry_call(_load, attempts=attempts, base_delay_s=0.01),
+                   mesh=mesh, tile=tile)

@@ -1,0 +1,14 @@
+"""Golden fixture: trips nonfinite-guard and nothing else.
+
+A serve-layer helper that materializes a computed (device) score batch
+on host and returns it with no isfinite/isnan check — exactly the hole
+the rule exists to catch: a poisoned coefficient row would sail through
+this return straight into a response.
+"""
+import numpy as np
+
+from repro.serve.store import PathStore  # noqa: F401  (marks serve scope)
+
+
+def serve_scores(scorer, batch, lam_idx, snap):
+    return np.asarray(scorer.dispatch(batch, lam_idx, snap))[: batch.n_live]

@@ -15,7 +15,7 @@ from repro.analysis import run_analysis
 from repro.analysis import runner
 from repro.analysis.context import ModuleInfo, Project
 from repro.analysis.findings import Suppressions
-from repro.analysis.rules import ALL_RULES, dead_code
+from repro.analysis.rules import ALL_RULES, dead_code, nonfinite_guard
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 FIXTURES = "tests/fixtures/analysis"
@@ -28,6 +28,7 @@ GOLDEN = {
     "fx_retrace.py": "retrace-hazard",
     "fx_bench_timing.py": "bench-timing",
     "fx_pallas.py": "pallas-conventions",
+    "fx_nonfinite_guard.py": "nonfinite-guard",
 }
 
 
@@ -47,7 +48,7 @@ def test_rule_registry_covers_the_suite():
     assert len(ids) == len(set(ids))
     for required in ("sharded-concat", "psum-axis", "host-sync-in-jit",
                      "retrace-hazard", "bench-timing", "pallas-conventions",
-                     "dead-code"):
+                     "dead-code", "nonfinite-guard"):
         assert required in ids
 
 
@@ -75,6 +76,19 @@ def test_dead_code_fixture_under_synthetic_src_path():
     assert [f.rule for f in findings] == ["dead-code"]
     assert "repro.orphan_scaffold" in findings[0].message
     assert _scan(f"{FIXTURES}/fx_dead_code.py").ok
+
+
+def test_nonfinite_guard_scopes_to_serve_paths():
+    # the rule is layer-scoped: the same unguarded host-crossing trips
+    # inside src/repro/serve/ but stays inert elsewhere in the tree
+    src = ("import numpy as np\n\n\ndef f(scorer, x):\n"
+           "    return np.asarray(scorer.dispatch(x))\n")
+    mod = ModuleInfo.parse("src/repro/serve/newmod.py", src)
+    findings = list(nonfinite_guard.check(Project(root=REPO, modules=[mod])))
+    assert [f.rule for f in findings] == ["nonfinite-guard"]
+    mod2 = ModuleInfo.parse("src/repro/data/other.py", src)
+    assert list(nonfinite_guard.check(
+        Project(root=REPO, modules=[mod2]))) == []
 
 
 def test_finding_render_format():

@@ -142,6 +142,7 @@ def test_pathstore_from_checkpoint_serves(fitted, tmp_path):
 
 def test_sklearn_surface(fitted):
     X, y, est, path = fitted
+    # allow[nonfinite-guard]: sklearn-surface oracle on a healthy fit, not served output; sign test below would fail on NaN anyway
     scores = np.asarray(est.decision_function(X))
     pred = np.asarray(est.predict(X))
     assert set(np.unique(pred)) <= {-1.0, 1.0}
@@ -264,6 +265,7 @@ def test_served_scores_bit_equal_decision_function(fitted):
                         jnp.asarray(batch.values), batch.batch_cap)
     for l in range(len(path)):
         got, ver = scorer.score(batch, np.full(n, path.lambdas[l]))
+        # allow[nonfinite-guard]: decision_function is the reference oracle; the served side of the bit-equality IS the guarded path
         ref = np.asarray(
             est.decision_function(design, beta=path.betas[l]))[:n]
         assert np.array_equal(got, ref), f"lambda index {l}"
@@ -331,9 +333,11 @@ def test_hot_swap_never_mixes_versions(fitted):
 
 
 def test_swap_releases_old_coefficients(fitted):
-    """Regression for the module-lifetime path-margins cache: after a
-    swap, the retired snapshot and its device coefficient stack must be
-    collectible — nothing (jit dispatch caches included) may pin them.
+    """Regression for the module-lifetime path-margins cache: the store
+    deliberately pins ONE retired snapshot (the last-good quarantine
+    fallback), so after two swaps the twice-retired snapshot and its
+    device coefficient stack must be collectible — nothing (jit dispatch
+    caches included) may pin them beyond that single-slot budget.
     Numpy-backed PathResults make the store own distinct device arrays,
     so the weakrefs below watch store-owned memory, not test locals."""
     import gc
@@ -357,6 +361,9 @@ def test_swap_releases_old_coefficients(fitted):
     s0 = store.snapshot
     refs = weakref.ref(s0), weakref.ref(s0.betas)
     store.swap(np_version(-1.0))
+    gc.collect()
+    assert refs[0]() is not None, "last-good snapshot dropped too early"
+    store.swap(np_version(0.5))   # v1 falls off the one-deep prev slot
     scorer.score(batch, lams)     # rebinds the dispatch's last-call caches
     del s0
     gc.collect()
