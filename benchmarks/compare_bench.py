@@ -25,6 +25,12 @@ Gated metrics (each applied only when present in *both* reports):
   (``repro.serve``) per batch size; catastrophic-only floor (same 2x
   widening) so a batched dispatch degenerating into per-request work
   fails while host-side packing jitter does not.
+* ``streamed.*`` — the HBM-budgeted streamed-residency path:
+  ``bit_identical`` is an absolute gate (streaming changes where buckets
+  live, never the math — any drift is a correctness bug, not a perf
+  regression), while the streamed warm time gets the same wide
+  catastrophic-only ratio gate as the other sub-second tiny sections
+  (host->device put latency under CI load flaps far more than compute).
 
 All time gates are ratios so the baseline only needs regenerating when
 shapes change:
@@ -106,7 +112,7 @@ def main() -> int:
     # a section present in the baseline but absent from the fresh report
     # means the bench stopped measuring it — that must fail, not silently
     # skip the gate (e.g. someone dropping --kernels from the CI lane)
-    for name in ("distributed", "kernels", "cycle", "serve"):
+    for name in ("distributed", "kernels", "cycle", "serve", "streamed"):
         if name in base and name not in fresh:
             print(f"FAIL: baseline has a '{name}' section but the fresh "
                   f"report does not — was the bench flag dropped?")
@@ -182,6 +188,23 @@ def main() -> int:
                 print(f"FAIL: blocked path objective diverged from the "
                       f"sequential path (max rel gap {gap:.2e} > 1e-3)")
                 ok = False
+
+    if "streamed" in fresh:
+        # absolute correctness gate, checked even without a baseline
+        # section: a streamed path that is not bit-identical to the
+        # resident path is broken regardless of how fast it is
+        if not fresh["streamed"]["bit_identical"]:
+            print("FAIL: streamed path diverged from the resident path — "
+                  "residency must never change the math")
+            ok = False
+    if "streamed" in fresh and "streamed" in base:
+        # the streamed section rides sub-second tiny runs dominated by
+        # host->device puts; like the blocked warm path it only gets the
+        # wide catastrophic gate (2x the normal ratio)
+        ok &= _gate_time("streamed-residency warm path",
+                         fresh["streamed"]["streamed_warm_s"] / norm(fresh),
+                         base["streamed"]["streamed_warm_s"] / norm(base),
+                         2 * args.max_ratio, unit)
 
     if "serve" in fresh and "serve" in base:
         for bs, row in sorted(base["serve"]["batch"].items()):

@@ -17,7 +17,12 @@ repeated production paths pay.
 ``--distributed`` adds a third driver — ``regularization_path_distributed``
 on a 2x4 fake-device mesh (same screened engine, restricted solves on the
 mesh); ``--sparse`` runs it over by-feature (row_idx, values) slabs so the
-whole path (screen included) never materializes a dense X. ``--cycle``
+whole path (screen included) never materializes a dense X. ``--streamed``
+adds the HBM-budgeted residency section: the same slab-bucket path with
+``device_budget_bytes`` one bucket short of the padded slab total, so the
+``BucketResidencyManager`` double-buffers buckets host->device through
+every pass — reported against the resident run (warm ratio, prefetch hit
+rate) with a bit-identity check. ``--cycle``
 adds the blocked-vs-sequential CD cycle section: a per-tile microbench of
 the semi-parallel cycle against the F-step chain plus the engine path
 rerun with ``cycle_mode="blocked"`` (the CI gate keeps the per-tile
@@ -27,7 +32,7 @@ batch sizes; gated catastrophic-only).
 
     PYTHONPATH=src python -m benchmarks.regpath_bench            # paper-ish shape
     PYTHONPATH=src python -m benchmarks.regpath_bench --tiny     # CI smoke
-    PYTHONPATH=src python -m benchmarks.regpath_bench --tiny --distributed --sparse --kernels --cycle --serve
+    PYTHONPATH=src python -m benchmarks.regpath_bench --tiny --distributed --sparse --streamed --kernels --cycle --serve
 """
 from __future__ import annotations
 
@@ -135,10 +140,85 @@ def bench_serve(X, y, path_len: int, opts: DGLMNETOptions,
     return out
 
 
+def bench_streamed(n: int, p: int, path_len: int, opts: DGLMNETOptions,
+                   mesh, dp: int) -> dict:
+    """Streamed (HBM-budgeted) vs resident slab-bucket path at matched
+    shapes: the same screened driver over the same ``SlabBuckets``, once
+    fully device-resident and once with ``device_budget_bytes`` one
+    bucket short of the padded total, so the residency manager must
+    double-buffer host->device through every pass. Reports the
+    streamed/resident warm ratio (the price of not fitting in HBM), the
+    prefetch hit rate, and a bit-identity check — streaming changes
+    where buckets live, never the math.
+
+    The section rebuilds its own stratified-density X: uniform-density
+    columns land in one or two nnz capacity classes, and with fewer than
+    three buckets the double buffer already covers the slab (nothing to
+    evict, nothing to stream)."""
+    import numpy as np
+
+    from repro.api import LogisticL1, as_design
+    from repro.data.byfeature import to_by_feature, to_slab_buckets
+
+    rng = np.random.default_rng(0)
+    levels = [4, 12, 28, min(60, n // 2)]
+    X = np.zeros((n, p), np.float32)
+    for j in range(p):
+        rows = rng.choice(n, size=levels[j % len(levels)], replace=False)
+        X[rows, j] = rng.normal(size=rows.size).astype(np.float32)
+    w = rng.normal(size=p) * (rng.random(p) < 0.3)
+    prob = 1.0 / (1.0 + np.exp(-(X @ w)))
+    y = np.where(rng.random(n) < prob, 1.0, -1.0).astype(np.float32)
+
+    slabs = to_slab_buckets(to_by_feature(X), dp)
+    assert len(slabs.buckets) >= 3, slabs.k_classes
+    tile = opts.tile
+    sizing = as_design(slabs, mesh=mesh, tile=tile)
+    budget = sizing.slab_nbytes(tile) - min(sizing.slab_bucket_nbytes(tile))
+    last = {}
+
+    def run_path(budget_bytes):
+        # a fresh design per call: resident timing pays its one-shot
+        # device puts the same way streamed pays per-pass streaming, so
+        # the warm ratio compares end-to-end placement + solve
+        des = as_design(slabs, mesh=mesh, tile=tile,
+                        device_budget_bytes=budget_bytes)
+        pts = LogisticL1(opts=opts, mesh=mesh).path(des, y,
+                                                    path_len=path_len)
+        last["des"] = des
+        last["pts"] = pts
+        return [pt.beta for pt in pts]
+
+    _, res_cold = _timed(lambda: run_path(None))
+    _, res_warm = _timed(lambda: run_path(None))
+    res_pts = last["pts"]
+    _, str_cold = _timed(lambda: run_path(budget))
+    _, str_warm = _timed(lambda: run_path(budget))
+    stats = last["des"].residency_stats()[tile]
+    assert stats["streamed"] and stats["evictions"] > 0, stats
+    bit_identical = all(
+        a.lam == b.lam and a.f == b.f and a.nnz == b.nnz
+        and bool(jnp.all(a.beta == b.beta))
+        for a, b in zip(res_pts, last["pts"]))
+    return {
+        "n_buckets": stats["n_buckets"],
+        "budget_bytes": stats["budget_bytes"],
+        "total_bytes": stats["total_bytes"],
+        "resident_cold_s": res_cold, "resident_warm_s": res_warm,
+        "streamed_cold_s": str_cold, "streamed_warm_s": str_warm,
+        "warm_ratio_streamed_vs_resident": str_warm / max(res_warm, 1e-12),
+        "prefetch": {k: stats[k] for k in ("hits", "misses", "evictions",
+                                           "puts", "bytes_h2d",
+                                           "hit_rate")},
+        "bit_identical": bit_identical,
+    }
+
+
 def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
         density: float = 0.2, k_true: int = 64,
         out_path: str = "BENCH_regpath.json",
         distributed: bool = False, sparse: bool = False,
+        streamed: bool = False,
         kernels: bool = False, cycle: bool = False, block: int = 16,
         serve: bool = False, tiny: bool = False) -> dict:
     # sparse ground truth (k_true << p): the large-p regime screening is
@@ -196,6 +276,17 @@ def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
         }
         print(f"# distributed{' (sparse slabs)' if sparse else ''}: "
               f"cold {dist_cold:.2f}s warm {dist_warm:.2f}s")
+        if streamed:
+            report["streamed"] = bench_streamed(n_trim, X.shape[1],
+                                                path_len, opts, mesh, 2)
+            st = report["streamed"]
+            print(f"# streamed: warm {st['streamed_warm_s']:.2f}s vs "
+                  f"resident {st['resident_warm_s']:.2f}s "
+                  f"({st['warm_ratio_streamed_vs_resident']:.2f}x) under "
+                  f"budget {st['budget_bytes']}/{st['total_bytes']}B over "
+                  f"{st['n_buckets']} buckets; prefetch hit rate "
+                  f"{st['prefetch']['hit_rate']:.2f}; bit_identical="
+                  f"{st['bit_identical']}")
     if cycle:
         import dataclasses
 
@@ -289,6 +380,11 @@ def main():
     ap.add_argument("--sparse", action="store_true",
                     help="with --distributed: run over by-feature sparse "
                          "slabs (no dense X on the mesh path)")
+    ap.add_argument("--streamed", action="store_true",
+                    help="with --distributed: add the HBM-budgeted "
+                         "streamed-residency section (streamed vs "
+                         "resident warm path, prefetch hit rate, "
+                         "bit-identity)")
     ap.add_argument("--kernels", action="store_true",
                     help="add the slab kernel microbench section "
                          "(sparse-native vs densify at matched shapes)")
@@ -312,9 +408,12 @@ def main():
         args.n, args.p, args.path_len = 512, 256, 6
     if args.sparse and not args.distributed:
         ap.error("--sparse requires --distributed")
+    if args.streamed and not args.distributed:
+        ap.error("--streamed requires --distributed")
     report = run(n=args.n, p=args.p, path_len=args.path_len,
                  density=args.density, out_path=args.out,
                  distributed=args.distributed, sparse=args.sparse,
+                 streamed=args.streamed,
                  kernels=args.kernels, cycle=args.cycle, block=args.block,
                  serve=args.serve, tiny=args.tiny)
     # Screening pays in proportion to p; tiny CI-smoke shapes sit below the

@@ -4,6 +4,7 @@ from __future__ import annotations
 
 from repro.analysis.rules import (
     bench_timing,
+    bucket_residency,
     dead_code,
     host_sync,
     nonfinite_guard,
@@ -22,6 +23,7 @@ ALL_RULES = (
     pallas,
     dead_code,
     nonfinite_guard,
+    bucket_residency,
 )
 
 RULES_BY_ID = {r.RULE_ID: r for r in ALL_RULES}

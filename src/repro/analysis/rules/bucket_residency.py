@@ -1,0 +1,81 @@
+"""bucket-residency: slab device placement outside its single home.
+
+Slab-bucket device memory is budgeted by exactly ONE module —
+``repro.data.residency``. The :class:`BucketResidencyManager` owns the
+padded work buckets (LRU under ``device_budget_bytes``, streamed
+host->device prefetch, hit/miss/bytes-moved counters), and transient
+slab placements (restricted-solve operands, serve request slabs) go
+through its ``put_slab`` door. A raw ``jax.device_put`` of slab arrays
+anywhere else is invisible to the budget: it can silently blow past the
+HBM ceiling a streamed solve was configured for, and it bypasses the
+lost-bucket retry/injection path. Same single-home shape as the
+``sharded-concat`` rule.
+
+The heuristic is name-based (this is a lint, not a type system): a
+``jax.device_put`` whose first argument's trailing identifier looks like
+a slab operand — ``row_idx``/``values``/``rows``/``vals``/``r_b``/
+``v_b``/anything containing ``slab`` — is a finding in any mesh-aware
+module outside the home. Non-slab placements (betas, margins, labels)
+keep their names and stay exempt; a false positive documents itself with
+an ``allow[bucket-residency]: reason`` pragma.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from repro.analysis.context import Project
+from repro.analysis.findings import Finding
+
+RULE_ID = "bucket-residency"
+DOC = ("jax.device_put of slab arrays outside data/residency.py — route "
+       "through BucketResidencyManager / put_slab (single home of the "
+       "slab device-memory budget)")
+
+#: the one module allowed to device_put slab buckets
+_HOME = "data/residency.py"
+
+_SLAB_NAMES = {
+    "row_idx", "values", "rows", "vals",
+    "r_b", "v_b", "rows_sub", "vals_sub",
+}
+
+
+def _trailing_name(node: ast.AST) -> Optional[str]:
+    """The last identifier of the argument expression: ``row_idx`` for
+    both ``row_idx`` and ``batch.row_idx``; None for call results etc."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _is_slabby(name: Optional[str]) -> bool:
+    if name is None:
+        return False
+    return name in _SLAB_NAMES or "slab" in name or "row_idx" in name
+
+
+def check(project: Project) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for mod in project.modules:
+        if mod.path.endswith(_HOME) or not mod.mesh_context:
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call) or not node.args:
+                continue
+            if mod.qualname(node.func) != "jax.device_put":
+                continue
+            name = _trailing_name(node.args[0])
+            if _is_slabby(name):
+                out.append(Finding(
+                    file=mod.path, line=node.lineno, rule=RULE_ID,
+                    message=(
+                        f"jax.device_put({name}, ...) places slab arrays "
+                        f"outside the residency budget — use "
+                        f"repro.data.residency.put_slab (or the "
+                        f"BucketResidencyManager for work buckets; or "
+                        f"allow[{RULE_ID}] with why this is not slab data)"),
+                ))
+    return out

@@ -53,9 +53,11 @@ from repro.data.byfeature import (
     gather_features,
     gather_features_buckets,
     scatter_features,
+    take_buckets_iter,
     take_features_buckets,
     to_slabs,
 )
+from repro.data.residency import BucketResidencyManager
 
 
 @runtime_checkable
@@ -367,18 +369,25 @@ class BucketedSlabDesign:
 
 @dataclass(eq=False)
 class _MeshSlabState:
-    """Per-(design, tile) mesh residency: the padded, device-put work
-    buckets plus the work-axis bookkeeping the estimator's screened path
-    consumes. Built once, cached on the owning :class:`ShardedDesign`."""
+    """Per-(design, tile) mesh residency: the padded work buckets behind
+    a :class:`~repro.data.residency.BucketResidencyManager` plus the
+    work-axis bookkeeping the estimator's screened path consumes. Built
+    once, cached on the owning :class:`ShardedDesign`. Every per-bucket
+    pass goes through :meth:`iter_buckets`, so resident and streamed
+    residency run the same op sequence in the same bucket order."""
 
-    work_buckets: tuple          # of (row_idx, values, feat_idx) on mesh
-    slabs_work: SlabBuckets
+    residency: BucketResidencyManager
     feat_map: jnp.ndarray        # (p_work,) original id per work pos, sentinel p
     k_arr: jnp.ndarray           # (p_work,) per-feature max live slots
     k_max: int
     p_work: int
     n_loc: int
     cap_tile: int
+
+    def iter_buckets(self):
+        """(row_idx, values, feat_idx) device buckets in work order —
+        streamed mode prefetches bucket t+1 behind bucket t's compute."""
+        return self.residency.iter_buckets()
 
 
 @dataclass(eq=False)
@@ -397,11 +406,18 @@ class ShardedDesign:
     ``tile`` aligns the internal feature padding with the solver's Gram
     tile (``DGLMNETOptions.tile``); results are tile-invariant, so the
     default only matters for program-shape reuse.
+
+    ``device_budget_bytes`` caps how many padded slab-bucket bytes may be
+    device-resident at once: below :meth:`slab_nbytes`, the residency
+    manager streams buckets host->device through every pass instead of
+    keeping them all resident (bit-identical results, epoch-style
+    copies). Set it before the first residency build (`_mesh_state`).
     """
 
     inner: Design
     mesh: object                 # jax.sharding.Mesh
     tile: int = 128
+    device_budget_bytes: Optional[int] = None
     _states: dict = field(default_factory=dict, init=False, repr=False)
 
     def __post_init__(self):
@@ -481,41 +497,71 @@ class ShardedDesign:
         slabs = self._as_buckets()
         n_loc = slabs.n_loc
         slab_sharding = NamedSharding(self.mesh, P("model", self.daxes, None))
-        work_buckets = []
+        budget = self.device_budget_bytes
+        padded_buckets = []
         feat_map_parts = []
         k_arr_parts = []
         for r_b, v_b, fid in slabs.buckets:
             if check_slab_shapes(r_b, v_b, self.mesh, n) != n_loc:
                 raise ValueError("bucket n_loc inconsistent with mesh/n")
+            if budget is not None:
+                # streaming intent: the manager's source copies must be
+                # host-side, or "evicted" buckets would stay device-
+                # resident on the default device anyway
+                r_b, v_b = np.asarray(r_b), np.asarray(v_b)
+            xp = np if isinstance(r_b, np.ndarray) else jnp
             # pad each bucket's feature axis so the streaming screen's
             # tile walk and every capacity bucket stay mesh-aligned;
             # all-sentinel slabs have zero gradient and are never admitted
             pad_b = (-r_b.shape[0]) % cap_tile
             if pad_b:
-                r_b = jnp.pad(r_b, ((0, pad_b), (0, 0), (0, 0)),
-                              constant_values=n_loc)
-                v_b = jnp.pad(v_b, ((0, pad_b), (0, 0), (0, 0)))
+                r_b = xp.pad(r_b, ((0, pad_b), (0, 0), (0, 0)),
+                             constant_values=n_loc)
+                v_b = xp.pad(v_b, ((0, pad_b), (0, 0), (0, 0)))
             # k per feature on host *before* the slabs land sharded
             k_arr_parts.append(
                 np.asarray((r_b < n_loc).sum(axis=-1).max(axis=-1)))
-            r_b = jax.device_put(r_b, slab_sharding)
-            v_b = jax.device_put(v_b, slab_sharding)
-            work_buckets.append((r_b, v_b, fid))
+            padded_buckets.append((r_b, v_b, fid))
             feat_map_parts.append(np.concatenate([
                 np.asarray(fid, np.int32),
                 np.full(pad_b, p, np.int32)]))
         st = _MeshSlabState(
-            work_buckets=tuple(work_buckets),
-            slabs_work=SlabBuckets(tuple(work_buckets), n_loc, p),
+            residency=BucketResidencyManager(
+                tuple(padded_buckets), sharding=slab_sharding,
+                budget_bytes=budget),
             feat_map=jnp.asarray(np.concatenate(feat_map_parts)),
             k_arr=jnp.asarray(np.concatenate(k_arr_parts)),
-            k_max=max(b[0].shape[-1] for b in work_buckets),
-            p_work=sum(b[0].shape[0] for b in work_buckets),
+            k_max=max(b[0].shape[-1] for b in padded_buckets),
+            p_work=sum(b[0].shape[0] for b in padded_buckets),
             n_loc=n_loc,
             cap_tile=cap_tile,
         )
         self._states[tile] = st
         return st
+
+    def slab_bucket_nbytes(self, tile: Optional[int] = None) -> Tuple[int, ...]:
+        """Per-bucket *padded* device bytes at ``tile`` alignment — the
+        exact sizes the residency manager will account, computed host-side
+        from shapes alone (no device work, safe for the strategy resolver
+        to call before any residency exists)."""
+        cap_tile = self.mdim * (self.tile if tile is None else tile)
+        out = []
+        for r_b, v_b, _ in self._as_buckets().buckets:
+            p_b, dp, k_b = r_b.shape
+            p_pad = p_b + (-p_b) % cap_tile
+            out.append(p_pad * dp * k_b
+                       * (r_b.dtype.itemsize + v_b.dtype.itemsize))
+        return tuple(out)
+
+    def slab_nbytes(self, tile: Optional[int] = None) -> int:
+        """Total padded slab bytes (sum of :meth:`slab_bucket_nbytes`);
+        a ``device_budget_bytes`` below this streams the path solve."""
+        return sum(self.slab_bucket_nbytes(tile))
+
+    def residency_stats(self) -> dict:
+        """Per-tile residency telemetry (hit/miss/eviction/bytes-moved
+        counters) for every built mesh state."""
+        return {t: st.residency.stats() for t, st in self._states.items()}
 
     # -- Design protocol ---------------------------------------------------
 
@@ -532,7 +578,7 @@ class ShardedDesign:
         bsharding = NamedSharding(self.mesh, P("model"))
         m = None
         off = 0
-        for r_b, v_b, _ in st.work_buckets:
+        for r_b, v_b, _ in st.iter_buckets():
             p_b = r_b.shape[0]
             beta_b = jax.device_put(
                 jax.lax.dynamic_slice(beta_work, (off,), (p_b,)), bsharding)
@@ -553,7 +599,8 @@ class ShardedDesign:
         # them sharded miscompiles on current JAX — the shared
         # replicate-first guard is mandatory here (sharding/collect.py)
         g_work = concat_replicated(
-            [corr(r_b, v_b, v) for r_b, v_b, _ in st.work_buckets], self.mesh)
+            [corr(r_b, v_b, v) for r_b, v_b, _ in st.iter_buckets()],
+            self.mesh)
         p = self.shape[1]
         return jnp.zeros(p, g_work.dtype).at[st.feat_map].set(
             g_work, mode="drop")
@@ -585,15 +632,22 @@ class ShardedDesign:
         screen = make_sparse_screen(self.mesh, st.n_loc,
                                     st.cap_tile // self.mdim)
         return concat_replicated(
-            [screen(r_b, v_b, y, m) for r_b, v_b, _ in st.work_buckets],
+            [screen(r_b, v_b, y, m) for r_b, v_b, _ in st.iter_buckets()],
             self.mesh)
 
     def _gather_work(self, beta_work, mask_work, cap: int, k_cap: int,
                      tile: Optional[int] = None):
-        """Work-order active-set gather into a flat restricted design."""
+        """Work-order active-set gather into a flat restricted design.
+        The per-bucket take streams through the residency manager — same
+        ops as the resident ``gather_features_buckets``, so the gathered
+        working set is bit-identical either way."""
+        from repro.core.screening import pack_indices
+
         st = self._mesh_state(tile)
-        rows_sub, vals_sub, beta_sub, idx = gather_features_buckets(
-            st.slabs_work, beta_work, mask_work, cap, k_cap)
+        idx = pack_indices(mask_work, cap)
+        beta_sub = jnp.take(beta_work, idx, mode="fill", fill_value=0.0)
+        rows_sub, vals_sub = take_buckets_iter(
+            st.iter_buckets(), st.n_loc, idx, k_cap)
         front = (self.inner.front_packed
                  if hasattr(self.inner, "front_packed") else True)
         sub = ShardedDesign(
@@ -637,7 +691,8 @@ _DESIGN_TYPES = (DenseDesign, SlabDesign, BucketedSlabDesign, ShardedDesign)
 
 
 def as_design(data, *, n: Optional[int] = None, mesh=None,
-              tile: int = 128) -> Design:
+              tile: int = 128,
+              device_budget_bytes: Optional[int] = None) -> Design:
     """Coerce a legacy entry-point operand into a :class:`Design`.
 
     ``data`` may be a Design (passed through), a dense (n, p) array, a
@@ -647,7 +702,9 @@ def as_design(data, *, n: Optional[int] = None, mesh=None,
     K-capacity trim instead of silently dropping live entries), or a
     :class:`~repro.data.byfeature.SlabBuckets`. ``n`` is required for slab
     forms that don't carry it. With ``mesh``, the result is wrapped in a
-    :class:`ShardedDesign`.
+    :class:`ShardedDesign`; ``device_budget_bytes`` (mesh wrapping only)
+    is the residency budget that selects streamed slab passes when it is
+    below the padded slab byte total.
     """
     if isinstance(data, _DESIGN_TYPES):
         d = data
@@ -688,5 +745,6 @@ def as_design(data, *, n: Optional[int] = None, mesh=None,
             f"SlabBuckets, or a Design"
         )
     if mesh is not None and not isinstance(d, ShardedDesign):
-        d = ShardedDesign(d, mesh, tile=tile)
+        d = ShardedDesign(d, mesh, tile=tile,
+                          device_budget_bytes=device_budget_bytes)
     return d

@@ -63,6 +63,7 @@ from repro.api.types import (  # noqa: F401  (re-export: path output)
 )
 from repro.core.screening import _nll_residual
 from repro.data.byfeature import k_class, scatter_features
+from repro.data.residency import put_slab
 from repro.resilience import PathProgress, maybe_kill
 from repro.sharding.collect import replicate
 
@@ -302,8 +303,10 @@ def _fit_mesh_slab(row_idx, values, y, lam, mesh, strat: Strategy, beta0,
     vsharding = NamedSharding(mesh, P(daxes))
     bsharding = NamedSharding(mesh, P("model"))
 
-    row_idx = jax.device_put(row_idx, slab_sharding)
-    values = jax.device_put(values, slab_sharding)
+    # transient working-set slabs go through the residency module's door
+    # (single-home rule); they are not budget-managed — a restricted
+    # solve's operands must be resident for the solve regardless
+    row_idx, values = put_slab(row_idx, values, slab_sharding)
     y = jax.device_put(y, vsharding)
     beta = (
         jnp.zeros(row_idx.shape[0], jnp.float32)
@@ -380,12 +383,32 @@ class LogisticL1:
 
     def _design(self, data, y=None) -> Design:
         n = None if y is None else int(jnp.shape(y)[0])
-        design = as_design(data, n=n, mesh=self.mesh, tile=self.opts.tile)
+        design = as_design(data, n=n, mesh=self.mesh, tile=self.opts.tile,
+                           device_budget_bytes=self.opts.device_budget_bytes)
         if (self.mesh is not None and isinstance(design, ShardedDesign)
                 and design.mesh is not self.mesh):
             raise ValueError(
                 "design is sharded over a different mesh than the estimator's"
             )
+        if (isinstance(design, ShardedDesign)
+                and self.opts.device_budget_bytes is not None
+                and design.device_budget_bytes
+                != self.opts.device_budget_bytes):
+            if design._states:
+                # residency already built under the design's own budget —
+                # rebuilding would double device memory, mirroring the
+                # tile-mismatch warning below
+                import warnings
+
+                warnings.warn(
+                    f"ShardedDesign residency was already built with "
+                    f"device_budget_bytes={design.device_budget_bytes} but "
+                    f"the estimator opts say "
+                    f"{self.opts.device_budget_bytes}; keeping the existing "
+                    f"residency — construct the design with the same budget "
+                    f"to silence this", stacklevel=3)
+            else:
+                design.device_budget_bytes = self.opts.device_budget_bytes
         if (isinstance(design, ShardedDesign) and design.layout != "dense"
                 and design._states and self.opts.tile not in design._states):
             # the estimator threads opts.tile through every work-axis

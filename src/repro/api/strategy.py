@@ -32,6 +32,7 @@ class Strategy:
     opts: DGLMNETOptions            # cycle_mode resolved to a concrete mode
     cap_tile: int                   # feature-capacity quantum (screened path)
     densify: Optional[bool] = None  # slab solver: force/forbid densify-once
+    residency: str = "resident"     # "resident" | "streamed" (mesh slabs)
 
     def use_densify(self, n_loc: int, k: int) -> bool:
         """Per-solve densify decision for the slab solver: the explicit
@@ -79,7 +80,14 @@ def resolve(design: Design, opts: DGLMNETOptions, *,
       consumer sees only "sequential" or "blocked";
     * ``cap_tile`` is the capacity quantum restricted solves are bucketed
       to: ``tile`` locally, ``model_dim * tile`` on a mesh (restricted
-      shapes stay mesh-aligned, O(log(p/tile)) programs per path).
+      shapes stay mesh-aligned, O(log(p/tile)) programs per path);
+    * ``residency`` is "streamed" when the design's device budget is
+      below its padded slab byte total (the
+      :class:`~repro.data.residency.BucketResidencyManager` then double-
+      buffers buckets host->device through every pass), else "resident".
+      A budget on a sharded *dense* layout is rejected here: dense mesh
+      solves keep the whole X resident, so the budget would silently not
+      bound anything — convert to slabs (``to_slab_buckets``) to stream.
     """
     sharded = isinstance(design, ShardedDesign)
     execution = "mesh" if sharded else "local"
@@ -87,8 +95,17 @@ def resolve(design: Design, opts: DGLMNETOptions, *,
         else "dense"
     opts = _resolve_cycle(opts)
     cap_tile = (design.mdim if sharded else 1) * opts.tile
+    residency = "resident"
+    if sharded and design.device_budget_bytes is not None:
+        if solver != "slab":
+            raise ValueError(
+                "device_budget_bytes streams slab layouts only; a sharded "
+                f"dense design keeps X fully resident — build the design "
+                f"from slabs (to_by_feature / to_slab_buckets) to stream")
+        if design.device_budget_bytes < design.slab_nbytes(opts.tile):
+            residency = "streamed"
     return Strategy(execution=execution, solver=solver, opts=opts,
-                    cap_tile=cap_tile, densify=densify)
+                    cap_tile=cap_tile, densify=densify, residency=residency)
 
 
 def mesh_programs(mesh, opts: DGLMNETOptions, *, layout: str = "dense",

@@ -54,6 +54,10 @@ class DGLMNETOptions:
     # safeguard), or "auto" (kernels.prefer_blocked_cd tile-size heuristic)
     cycle_mode: str = "sequential"
     block: int = 16                  # B: coordinates per semi-parallel block
+    # device-residency budget for mesh slab layouts: below the padded
+    # slab byte total, work buckets stream host->device through each
+    # pass (bit-identical, epoch-style copies); None = fully resident
+    device_budget_bytes: Optional[int] = None
 
     def __post_init__(self):
         # Eager validation with actionable messages — a bad bundle used to
@@ -80,6 +84,12 @@ class DGLMNETOptions:
             raise ValueError(f"n_cycles must be >= 1, got {self.n_cycles}")
         if self.max_iters < 1:
             raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
+        if self.device_budget_bytes is not None \
+                and self.device_budget_bytes < 1:
+            raise ValueError(
+                f"device_budget_bytes must be a positive byte count (or "
+                f"None for fully-resident slabs), got "
+                f"{self.device_budget_bytes}")
 
 
 class FitState(NamedTuple):

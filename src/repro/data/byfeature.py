@@ -158,6 +158,20 @@ class SlabBuckets:
         """Original feature ids in concatenated bucket order."""
         return np.concatenate([np.asarray(b[2]) for b in self.buckets])
 
+    @property
+    def bucket_nbytes(self) -> Tuple[int, ...]:
+        """Per-bucket slab payload bytes (row_idx + values; the host-side
+        ``feat_idx`` maps are excluded). This is what the residency budget
+        (``repro.data.residency``) and any future heavy-feature split
+        account in."""
+        return tuple(int(r.nbytes) + int(v.nbytes) for r, v, _ in self.buckets)
+
+    @property
+    def nbytes(self) -> int:
+        """Total slab payload bytes across buckets (sum of
+        :attr:`bucket_nbytes`)."""
+        return sum(self.bucket_nbytes)
+
 
 def _regroup_slabs(bf: ByFeature, dp: int):
     """Shared regroup: global rows -> per-shard local rows + per-(feature,
@@ -230,7 +244,10 @@ def to_slab_buckets(bf: ByFeature, dp: int, *, k_min: int = 8) -> SlabBuckets:
     padded only to K_i. Heavy (power-law head) features no longer inflate
     every slab to the global max: storage drops from O(p K_max) to
     ~O(nnz), and the screened path solves each restricted problem at the
-    smallest class that holds its active features.
+    smallest class that holds its active features. The returned layout
+    carries its own byte accounting (:attr:`SlabBuckets.bucket_nbytes` /
+    :attr:`SlabBuckets.nbytes`) — the inputs to the device-residency
+    budget (``repro.data.residency``).
     """
     if bf.n % dp:
         raise ValueError(
@@ -306,20 +323,20 @@ def gather_features(row_idx, values, beta, mask, cap: int, *, sentinel: int,
     return row_idx_sub, values_sub, beta_sub, idx
 
 
-def take_features_buckets(slabs: "SlabBuckets", idx, k_cap: int):
-    """Explicit-index feature take over an nnz-bucketed layout.
+def take_buckets_iter(buckets, n_loc: int, idx, k_cap: int):
+    """Core of :func:`take_features_buckets` over *any* iterable of
+    ``(row_idx, values, ...)`` buckets.
 
-    ``idx`` holds concatenated-bucket-axis positions (sentinel >= the
-    concatenated extent marks padding). Each bucket is taken with the
-    indices remapped into its own range (out-of-range -> all-sentinel
-    fill) and trimmed/padded to ``k_cap``; since every index lands in
-    exactly one bucket, a where-combine assembles a single
-    (len(idx), DP, k_cap) slab pair.
+    Resident tuples and the streamed iteration of
+    :class:`repro.data.residency.BucketResidencyManager` feed the exact
+    same op sequence through here — same bucket order, same
+    take/trim/where-combine — which is what keeps streamed gathers
+    bit-identical to resident ones.
     """
-    n_loc = slabs.n_loc
     rows_sub = vals_sub = None
     off = 0
-    for r_b, v_b, _ in slabs.buckets:
+    for bucket in buckets:
+        r_b, v_b = bucket[0], bucket[1]
         p_b = r_b.shape[0]
         ok = jnp.logical_and(idx >= off, idx < off + p_b)
         li = jnp.where(ok, idx - off, p_b)
@@ -335,6 +352,19 @@ def take_features_buckets(slabs: "SlabBuckets", idx, k_cap: int):
             vals_sub = jnp.where(sel, vb, vals_sub)
         off += p_b
     return rows_sub, vals_sub
+
+
+def take_features_buckets(slabs: "SlabBuckets", idx, k_cap: int):
+    """Explicit-index feature take over an nnz-bucketed layout.
+
+    ``idx`` holds concatenated-bucket-axis positions (sentinel >= the
+    concatenated extent marks padding). Each bucket is taken with the
+    indices remapped into its own range (out-of-range -> all-sentinel
+    fill) and trimmed/padded to ``k_cap``; since every index lands in
+    exactly one bucket, a where-combine assembles a single
+    (len(idx), DP, k_cap) slab pair.
+    """
+    return take_buckets_iter(slabs.buckets, slabs.n_loc, idx, k_cap)
 
 
 def gather_features_buckets(slabs: "SlabBuckets", beta, mask, cap: int,

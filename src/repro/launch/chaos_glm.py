@@ -23,6 +23,11 @@ geometry:
   admission control rejects, deadlines shed at drain, poisoned
   coefficients quarantine back to the last-good snapshot, and every
   casualty shows up in the telemetry counters.
+* ``lost-bucket`` — the streamed bucket-residency manager under prefetch
+  failure: a transient lost bucket is absorbed by retry (path stays
+  bit-identical to the resident solve); a fatal failure window placed
+  mid-path kills the streamed solve after a checkpoint, and resuming via
+  ``PathProgress`` reproduces the path bit-for-bit.
 """
 from __future__ import annotations
 
@@ -83,7 +88,8 @@ from repro.serve import (
     RequestBatcher,
 )
 
-_SCENARIOS = ("nan-inject", "kill-resume", "corrupt", "overload")
+_SCENARIOS = ("nan-inject", "kill-resume", "corrupt", "overload",
+              "lost-bucket")
 
 
 def _dataset(args, mesh):
@@ -246,6 +252,97 @@ def scenario_overload(args, mesh) -> None:
     print(f"# overload: served {len(scores)} scores at v{ver} under "
           f"latency+swap faults; quarantined={store.quarantined}; "
           f"telemetry={stats}")
+
+
+def _mixed_density_dataset(args, mesh, seed: int = 0):
+    """Synthetic X with stratified per-column nnz so ``to_slab_buckets``
+    yields several capacity classes — streamed residency needs >= 3
+    buckets before the LRU can evict anything under a double buffer."""
+    from repro.core.distributed import _data_extent
+
+    rng = np.random.default_rng(seed)
+    n, p = args.n, args.p
+    n -= n % _data_extent(mesh)
+    levels = [4, 12, 28, min(60, n // 2)]
+    X = np.zeros((n, p), np.float32)
+    for j in range(p):
+        rows = rng.choice(n, size=levels[j % len(levels)], replace=False)
+        X[rows, j] = rng.normal(size=rows.size).astype(np.float32)
+    w = rng.normal(size=p) * (rng.random(p) < 0.3)
+    prob = 1.0 / (1.0 + np.exp(-(X @ w)))
+    y = np.where(rng.random(n) < prob, 1.0, -1.0).astype(np.float32)
+    return X, y
+
+
+def scenario_lost_bucket(args, mesh) -> None:
+    """Streamed bucket residency under prefetch failure: transient faults
+    are absorbed by retry (bit-identical to resident); a fatal failure
+    window mid-path kills the solve after a checkpoint and the resume
+    reproduces the path bit-for-bit."""
+    from dataclasses import replace
+
+    from repro.api import as_design
+    from repro.core.distributed import _data_extent
+    from repro.core.dglmnet import DGLMNETOptions
+    from repro.data.byfeature import to_by_feature, to_slab_buckets
+    from repro.launch.mesh import make_dev_mesh
+
+    work_mesh = mesh if mesh is not None else make_dev_mesh(1, 1)
+    X, y = _mixed_density_dataset(args, work_mesh)
+    slabs = to_slab_buckets(to_by_feature(X), _data_extent(work_mesh))
+    assert len(slabs.buckets) >= 3, \
+        f"need >= 3 capacity classes to stream, got {slabs.k_classes}"
+
+    tile = 16
+    opts = DGLMNETOptions(tile=tile, max_iters=40)
+    kw = dict(path_len=args.path_len, screen=True)
+    base = LogisticL1(opts=opts, mesh=work_mesh).path(
+        as_design(slabs, mesh=work_mesh, tile=tile), y, **kw)
+
+    sizing = as_design(slabs, mesh=work_mesh, tile=tile)
+    budget = sizing.slab_nbytes(tile) - min(sizing.slab_bucket_nbytes(tile))
+    opts_s = replace(opts, device_budget_bytes=budget)
+
+    def streamed_design():
+        return as_design(slabs, mesh=work_mesh, tile=tile,
+                         device_budget_bytes=budget)
+
+    # transient: two consecutive put failures, absorbed by retry (3
+    # attempts) — the path must not notice
+    with inject_faults(FaultPlan(fail_prefetches=2)):
+        des = streamed_design()
+        streamed = LogisticL1(opts=opts_s, mesh=work_mesh).path(des, y, **kw)
+    stats = des.residency_stats()[tile]
+    assert stats["streamed"] and stats["evictions"] > 0, stats
+    assert stats["retries"] == 2, stats
+    assert np.array_equal(np.asarray(streamed.betas), np.asarray(base.betas))
+    assert np.array_equal(streamed.f, base.f)
+    assert np.array_equal(streamed.nnz, base.nnz)
+
+    # fatal: a failure window >= the retry budget, placed after half the
+    # healthy run's puts so the path dies mid-solve with checkpoints down
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = dict(checkpoint_every=1, resume_from=d)
+        died = False
+        try:
+            with inject_faults(FaultPlan(
+                    fail_prefetches=3,
+                    fail_prefetches_after=stats["puts"] // 2)):
+                LogisticL1(opts=opts_s, mesh=work_mesh).path(
+                    streamed_design(), y, **ckpt, **kw)
+        except RetriesExhausted:
+            died = True
+        assert died, "fatal prefetch window never fired"
+        resumed = LogisticL1(opts=opts_s, mesh=work_mesh).path(
+            streamed_design(), y, **ckpt, **kw)
+    assert np.array_equal(np.asarray(resumed.betas), np.asarray(base.betas))
+    assert np.array_equal(resumed.f, base.f)
+    assert np.array_equal(resumed.nnz, base.nnz)
+    print(f"# lost-bucket: streamed {stats['n_buckets']} buckets under "
+          f"budget {budget}B (hit_rate={stats['hit_rate']:.2f}, "
+          f"evictions={stats['evictions']}), transient faults retried, "
+          f"fatal window after {stats['puts'] // 2} puts resumed "
+          f"bit-identically")
 
 
 def main():

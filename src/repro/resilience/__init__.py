@@ -32,6 +32,7 @@ from repro.resilience.inject import (  # noqa: F401
     maybe_kill,
     serve_delay,
     take_load_failure,
+    take_prefetch_failure,
     take_swap_failure,
 )
 from repro.resilience.progress import PathProgress  # noqa: F401

@@ -24,6 +24,13 @@ depend on it being armed:
   — the serve layer's latency and transient-failure knobs (the latter
   two are consumable counters, so retry-with-backoff paths can be
   exercised deterministically).
+* ``take_prefetch_failure()`` — the streamed bucket-residency manager's
+  lost-bucket knob (``repro.data.residency``): each consult either burns
+  one of ``fail_prefetches_after`` healthy host->device puts or consumes
+  one of ``fail_prefetches`` failures, so a drill can place the failure
+  window mid-path deterministically (transient -> absorbed by retry;
+  >= the retry budget -> the path dies and must resume via
+  ``PathProgress``).
 * :func:`corrupt_checkpoint` — host-side, deterministic corruption of a
   ``repro.checkpoint`` directory (bit flip / truncation / meta drop).
 
@@ -90,7 +97,10 @@ class FaultPlan:
     ``fail_loads`` are consumable counters making the next N
     ``PathStore.swap`` / checkpoint loads raise :class:`InjectedFault`
     (exercising retry-with-backoff). ``serve_latency_s`` sleeps every
-    scorer dispatch by that much.
+    scorer dispatch by that much. ``fail_prefetches`` makes N consecutive
+    slab-bucket host->device puts fail, after first letting
+    ``fail_prefetches_after`` puts through healthy — the offset is what
+    lands a lost-bucket fault mid-path instead of at residency build.
     """
 
     seed: int = 0
@@ -100,6 +110,8 @@ class FaultPlan:
     serve_latency_s: float = 0.0
     fail_swaps: int = 0
     fail_loads: int = 0
+    fail_prefetches: int = 0
+    fail_prefetches_after: int = 0
 
 
 class _ActivePlan:
@@ -110,6 +122,8 @@ class _ActivePlan:
         self.engine_left = plan.engine_fires
         self.swaps_left = plan.fail_swaps
         self.loads_left = plan.fail_loads
+        self.prefetch_ok_left = plan.fail_prefetches_after
+        self.prefetches_left = plan.fail_prefetches
 
 
 _LOCK = threading.Lock()
@@ -191,6 +205,26 @@ def take_load_failure() -> bool:
         if a is None or a.loads_left <= 0:
             return False
         a.loads_left -= 1
+        return True
+
+
+def take_prefetch_failure() -> bool:
+    """Consume one injected slab-bucket prefetch failure, if any remain.
+
+    The first ``fail_prefetches_after`` consults are let through healthy
+    (each burns one unit of the offset); the next ``fail_prefetches``
+    consults return True. The residency manager calls this once per
+    host->device put *attempt*, so retries burn failures too — a count
+    below the retry budget is transient, at or above it is fatal.
+    """
+    with _LOCK:
+        a = _ACTIVE
+        if a is None or a.prefetches_left <= 0:
+            return False
+        if a.prefetch_ok_left > 0:
+            a.prefetch_ok_left -= 1
+            return False
+        a.prefetches_left -= 1
         return True
 
 

@@ -184,8 +184,12 @@ class PathScorer:
         daxes = _data_axes(mesh)
         slab_sh = NamedSharding(mesh, P("model", daxes, None))
         fn = self._margins_for(mesh, batch.n_loc)
+        # request slabs are transient placements, routed through the
+        # residency module's sanctioned door (bucket-residency rule)
+        from repro.data.residency import put_slab
+
+        rows_dev, vals_dev = put_slab(batch.row_idx, batch.values, slab_sh)
         return fn(
-            jax.device_put(batch.row_idx, slab_sh),
-            jax.device_put(batch.values, slab_sh),
+            rows_dev, vals_dev,
             jax.device_put(lam_idx, NamedSharding(mesh, P(daxes))),
             snap.betas)

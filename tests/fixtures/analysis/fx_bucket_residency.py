@@ -1,0 +1,13 @@
+"""Golden fixture: trips bucket-residency and nothing else.
+
+A raw ``jax.device_put`` of slab arrays in a mesh-aware module bypasses
+the residency budget — it must route through
+``repro.data.residency.put_slab`` (or the ``BucketResidencyManager`` for
+work buckets).
+"""
+import jax
+from jax.sharding import Mesh  # noqa: F401  (marks the module mesh-aware)
+
+
+def place_slab(row_idx, sharding):
+    return jax.device_put(row_idx, sharding)

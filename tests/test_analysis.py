@@ -29,6 +29,7 @@ GOLDEN = {
     "fx_bench_timing.py": "bench-timing",
     "fx_pallas.py": "pallas-conventions",
     "fx_nonfinite_guard.py": "nonfinite-guard",
+    "fx_bucket_residency.py": "bucket-residency",
 }
 
 
@@ -48,7 +49,7 @@ def test_rule_registry_covers_the_suite():
     assert len(ids) == len(set(ids))
     for required in ("sharded-concat", "psum-axis", "host-sync-in-jit",
                      "retrace-hazard", "bench-timing", "pallas-conventions",
-                     "dead-code", "nonfinite-guard"):
+                     "dead-code", "nonfinite-guard", "bucket-residency"):
         assert required in ids
 
 
