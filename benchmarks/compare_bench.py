@@ -49,6 +49,10 @@ import argparse
 import json
 import sys
 
+#: sections that exist only when their bench flag is passed; a baseline
+#: carrying one the fresh report lacks means the flag was dropped
+_FLAGGED_SECTIONS = ("distributed", "kernels", "cycle", "serve", "streamed")
+
 
 def _gate_time(name, fresh_s, base_s, max_ratio, unit="s") -> bool:
     ratio = fresh_s / max(base_s, 1e-12)
@@ -58,6 +62,44 @@ def _gate_time(name, fresh_s, base_s, max_ratio, unit="s") -> bool:
         print(f"FAIL: {name} regressed {ratio:.2f}x > {max_ratio}x")
         return False
     return True
+
+
+def _explain_by_phase(fresh_path, base_path, max_ratio) -> None:
+    """Attribute a front-door warm regression to solver phases using the
+    obs trace summaries (``regpath_bench --trace-summary`` side files):
+    per-span totals for screen_round / restricted_solve / kkt_check /
+    point_finish say WHERE the wall time went, turning 'warm_s ratio
+    1.4x' into 'restricted_solve doubled, everything else held'."""
+
+    def load(path, role):
+        if path is None:
+            print(f"  (no --{role}-trace summary given — rerun "
+                  f"regpath_bench with --trace-summary for a per-phase "
+                  f"breakdown)")
+            return None
+        try:
+            with open(path) as fh:
+                return json.load(fh).get("spans", {})
+        except (OSError, ValueError) as err:
+            print(f"  (could not read --{role}-trace {path}: {err})")
+            return None
+
+    fresh_sp = load(fresh_path, "fresh")
+    if not fresh_sp:
+        return
+    base_sp = load(base_path, "base") or {}
+    print("per-phase breakdown of the traced warm leg (seconds):")
+    for name in sorted(fresh_sp,
+                       key=lambda n: -fresh_sp[n].get("total_s", 0.0)):
+        ft = fresh_sp[name].get("total_s", 0.0)
+        bt = base_sp.get(name, {}).get("total_s")
+        if bt is None:
+            print(f"  {name:<18} fresh {ft:9.4f}s (no baseline trace)")
+            continue
+        ratio = ft / max(bt, 1e-12)
+        flag = "  <-- regressed" if ratio > max_ratio else ""
+        print(f"  {name:<18} fresh {ft:9.4f}s vs baseline {bt:9.4f}s "
+              f"-> {ratio:5.2f}x{flag}")
 
 
 def main() -> int:
@@ -71,7 +113,22 @@ def main() -> int:
     ap.add_argument("--normalize", action="store_true",
                     help="divide each warm_s by the same run's seed-style "
                          "warm_s before comparing, so raw machine speed "
-                         "cancels (use on heterogeneous CI runners)")
+                         "cancels (use on heterogeneous CI runners). "
+                         "Units change accordingly: gated times are "
+                         "reported as unitless multiples of that run's "
+                         "seed-style warm time ('x seed-style') instead "
+                         "of seconds, and serve throughput becomes "
+                         "scores-per-seed-warm-unit rather than "
+                         "scores/sec — ratios and gates are unaffected")
+    ap.add_argument("--fresh-trace", default=None, metavar="PATH",
+                    help="obs trace summary for the fresh run (regpath_"
+                         "bench --trace-summary); when the front-door "
+                         "warm gate fails, the regression is broken down "
+                         "per solver phase")
+    ap.add_argument("--base-trace", default=None, metavar="PATH",
+                    help="obs trace summary for the baseline run, "
+                         "compared phase-by-phase against --fresh-trace "
+                         "on a front-door gate failure")
     args = ap.parse_args()
 
     with open(args.fresh) as fh:
@@ -108,14 +165,18 @@ def main() -> int:
                     fresh_eng["warm_s"] / norm(fresh),
                     base_eng["warm_s"] / norm(base),
                     args.max_ratio, unit)
+    if not ok:
+        _explain_by_phase(args.fresh_trace, args.base_trace, args.max_ratio)
 
     # a section present in the baseline but absent from the fresh report
     # means the bench stopped measuring it — that must fail, not silently
     # skip the gate (e.g. someone dropping --kernels from the CI lane)
-    for name in ("distributed", "kernels", "cycle", "serve", "streamed"):
+    for name in _FLAGGED_SECTIONS:
         if name in base and name not in fresh:
             print(f"FAIL: baseline has a '{name}' section but the fresh "
-                  f"report does not — was the bench flag dropped?")
+                  f"report does not — was the bench flag dropped? "
+                  f"(flag-gated sections a full run carries: "
+                  f"{', '.join(_FLAGGED_SECTIONS)})")
             ok = False
 
     if "distributed" in fresh and "distributed" in base:

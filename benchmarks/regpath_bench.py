@@ -114,11 +114,14 @@ def bench_serve(X, y, path_len: int, opts: DGLMNETOptions,
     token traffic through the batcher, one jitted ``slab_path_spmv``
     dispatch per drain. Reported per batch size — scores/sec is the
     serving headline the CI gate floors (catastrophic-only: throughput
-    rides host-side packing and flaps more than path wall-clock)."""
+    rides host-side packing and flaps more than path wall-clock) plus
+    the submit->score latency histogram (p50/p95/p99 seconds) recorded
+    through ``repro.obs``."""
     import numpy as np
 
     from repro.api import DenseDesign, LogisticL1
     from repro.launch.serve_glm import make_traffic, serve_loop
+    from repro.obs import observe
     from repro.serve import PathScorer, PathStore, RequestBatcher
 
     path = LogisticL1(opts=opts).path(DenseDesign(X), y, path_len=path_len)
@@ -132,10 +135,19 @@ def bench_serve(X, y, path_len: int, opts: DGLMNETOptions,
         for r, lam in zip(reqs[:bs], lams[:bs]):   # compile warm-up drain
             batcher.submit(r, lam)
         scorer.score(*batcher.drain())
-        total, secs, _ = serve_loop(scorer, batcher, reqs, lams, steps=steps)
+        # each batch size gets its own observe() window so the
+        # submit->score latency histogram (fed by mark_scored inside
+        # serve_loop) is per-row, not cumulative across sizes
+        with observe() as obs:
+            total, secs, _ = serve_loop(scorer, batcher, reqs, lams,
+                                        steps=steps)
+        hist = obs.summary().get("histograms", {}).get("serve.latency_s") \
+            or {}
         out["batch"][str(bs)] = {
             "scored": total, "warm_s": secs,
             "scores_per_s": total / max(secs, 1e-12),
+            "latency_s": {k: hist.get(k)
+                          for k in ("p50", "p95", "p99", "count")},
         }
     return out
 
@@ -220,7 +232,8 @@ def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
         distributed: bool = False, sparse: bool = False,
         streamed: bool = False,
         kernels: bool = False, cycle: bool = False, block: int = 16,
-        serve: bool = False, tiny: bool = False) -> dict:
+        serve: bool = False, tiny: bool = False,
+        trace_summary: str = None) -> dict:
     # sparse ground truth (k_true << p): the large-p regime screening is
     # for — most features never activate anywhere on the path
     cfg = GLMConfig(name="regpath-bench", num_examples=int(n / 0.8),
@@ -235,6 +248,24 @@ def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
     _, seed_warm = _timed(lambda: seed_style_path(X, y, path_len, opts))
     eng_rows, eng_cold = _timed(lambda: frontdoor_path(X, y, path_len, opts))
     _, eng_warm = _timed(lambda: frontdoor_path(X, y, path_len, opts))
+
+    if trace_summary:
+        # one extra warm front-door leg under repro.obs: the summary's
+        # per-phase totals (screen_round / restricted_solve / kkt_check /
+        # point_finish) let compare_bench explain a warm-path regression
+        # by phase instead of one opaque wall number
+        from repro.obs import observe, write_summary
+
+        with observe() as obs:
+            _, traced_warm = _timed(
+                lambda: frontdoor_path(X, y, path_len, opts))
+        summary = obs.summary()
+        summary["bench"] = {"section": "frontdoor",
+                            "traced_warm_s": traced_warm}
+        write_summary(summary, trace_summary)
+        print(f"# trace summary: {trace_summary} "
+              f"(traced warm {traced_warm:.2f}s; "
+              f"python -m repro.obs.report {trace_summary})")
 
     report = {
         "config": {"n": int(X.shape[0]), "p": int(X.shape[1]),
@@ -358,8 +389,15 @@ def run(*, n: int = 2048, p: int = 4096, path_len: int = 20,
         report["serve"] = bench_serve(X, y, path_len, opts,
                                       steps=10 if tiny else 30)
         for bs, row in report["serve"]["batch"].items():
+            lat = row["latency_s"]
+            lat_txt = ""
+            if lat.get("count"):
+                lat_txt = (f"; latency p50 {lat['p50'] * 1e3:.2f}ms / "
+                           f"p95 {lat['p95'] * 1e3:.2f}ms / "
+                           f"p99 {lat['p99'] * 1e3:.2f}ms")
             print(f"# serve batch {bs}: {row['scores_per_s']:,.0f} "
-                  f"scores/sec ({row['scored']} in {row['warm_s']:.3f}s)")
+                  f"scores/sec ({row['scored']} in {row['warm_s']:.3f}s)"
+                  + lat_txt)
     with open(out_path, "w") as fh:
         json.dump(report, fh, indent=2)
     print(f"# seed-style: cold {seed_cold:.2f}s warm {seed_warm:.2f}s")
@@ -399,6 +437,11 @@ def main():
                     help="add the online path-serving section (scores/sec "
                          "through repro.serve at two batch sizes)")
     ap.add_argument("--out", default="BENCH_regpath.json")
+    ap.add_argument("--trace-summary", default=None, metavar="PATH",
+                    help="re-run the warm front-door leg under repro.obs "
+                         "and write its per-phase summary JSON to PATH "
+                         "(render with python -m repro.obs.report; feed "
+                         "to compare_bench --fresh-trace)")
     ap.add_argument("--n", type=int, default=2048)
     ap.add_argument("--p", type=int, default=4096)
     ap.add_argument("--path-len", type=int, default=20)
@@ -415,7 +458,8 @@ def main():
                  distributed=args.distributed, sparse=args.sparse,
                  streamed=args.streamed,
                  kernels=args.kernels, cycle=args.cycle, block=args.block,
-                 serve=args.serve, tiny=args.tiny)
+                 serve=args.serve, tiny=args.tiny,
+                 trace_summary=args.trace_summary)
     # Screening pays in proportion to p; tiny CI-smoke shapes sit below the
     # break-even point, so the strictly-faster gate applies to real shapes.
     if not args.tiny and not report["frontdoor_strictly_faster"]:

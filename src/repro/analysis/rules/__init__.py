@@ -7,6 +7,7 @@ from repro.analysis.rules import (
     bucket_residency,
     dead_code,
     host_sync,
+    metric_discipline,
     nonfinite_guard,
     pallas,
     psum_axis,
@@ -24,6 +25,7 @@ ALL_RULES = (
     dead_code,
     nonfinite_guard,
     bucket_residency,
+    metric_discipline,
 )
 
 RULES_BY_ID = {r.RULE_ID: r for r in ALL_RULES}

@@ -1,0 +1,113 @@
+"""metric-discipline: ad-hoc timing/counters in src/repro outside repro.obs.
+
+``repro.obs`` is the single observability surface: spans own wall-time
+attribution (closed at existing sync points), the registry owns counters,
+and legacy stat dicts are mirrored onto it through ``register_metrics``
+adapters. A raw ``time.perf_counter()`` pair or a hand-rolled counter
+dict added anywhere else in the library starts a parallel telemetry
+channel the trace summaries, the report CLI and the chaos assertions
+never see — exactly the drift this subsystem was built to end.
+
+Two findings, both scoped to ``src/repro/`` outside ``src/repro/obs/``
+(benchmarks and launchers time things for a living; launcher offenders
+that predate the subsystem are carried in ``analysis-allowlist.toml``):
+
+* a call to a wall clock (``time.perf_counter`` / ``time.monotonic`` /
+  ``time.time``) — wrap the region in an ``obs.trace.span`` instead, or
+  justify with ``allow[metric-discipline]: why`` (e.g. the value is a
+  deadline fed to a clock-injectable API, not a measurement);
+* an ``x += ...`` onto a stats/counter-named target — route through
+  ``obs.registry.counter(...)`` instead. Increments lexically inside a
+  class that defines ``register_metrics`` are exempt: that's the
+  sanctioned legacy-adapter shape (the dict stays the bit-for-bit source
+  of truth and the registry mirrors it read-only).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from repro.analysis.context import ModuleInfo, Project
+from repro.analysis.findings import Finding
+
+RULE_ID = "metric-discipline"
+DOC = ("raw wall-clock call or ad-hoc counter increment outside repro.obs "
+       "— use obs.trace spans / obs.registry counters (or a "
+       "register_metrics adapter for legacy stat dicts)")
+
+#: the observability home; everything under it is the implementation
+_HOME = "src/repro/obs/"
+
+_CLOCKS = ("time.perf_counter", "perf_counter", "time.monotonic",
+           "monotonic", "time.time")
+
+#: substrings (of the full dotted target) that mark a counter-ish store;
+#: deliberately NOT bare "count" — loop counters are not telemetry
+_COUNTERISH = ("stats", "counter", "metric", "telemetry")
+
+
+def _target_chain(node: ast.AST) -> Optional[str]:
+    """Dotted identifier chain of an AugAssign target: ``self._stats``
+    for ``self._stats["drained"] += n``; None for non-name targets."""
+    if isinstance(node, ast.Subscript):
+        return _target_chain(node.value)
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if not isinstance(cur, ast.Name):
+        return None
+    parts.append(cur.id)
+    return ".".join(reversed(parts))
+
+
+def _adapter_exempt_nodes(mod: ModuleInfo) -> Set[ast.AST]:
+    """AST nodes inside classes that define ``register_metrics`` — the
+    legacy-counter adapter shape this rule sanctions."""
+    exempt: Set[ast.AST] = set()
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        has_adapter = any(
+            isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and fn.name == "register_metrics"
+            for fn in node.body)
+        if has_adapter:
+            exempt.update(ast.walk(node))
+    return exempt
+
+
+def check(project: Project) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for mod in project.modules:
+        if not mod.path.startswith("src/repro/"):
+            continue
+        if mod.path.startswith(_HOME):
+            continue
+        exempt = _adapter_exempt_nodes(mod)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and mod.qualname(node.func) \
+                    in _CLOCKS:
+                out.append(Finding(
+                    file=mod.path, line=node.lineno, rule=RULE_ID,
+                    message=(
+                        f"raw {mod.qualname(node.func)}() call outside "
+                        f"repro.obs — wrap the region in an obs.trace "
+                        f"span so the time lands in the trace summaries "
+                        f"(or allow[{RULE_ID}] with why this is not a "
+                        f"measurement)"),
+                ))
+            elif isinstance(node, ast.AugAssign) and node not in exempt:
+                chain = _target_chain(node.target)
+                if chain and any(w in chain.lower() for w in _COUNTERISH):
+                    out.append(Finding(
+                        file=mod.path, line=node.lineno, rule=RULE_ID,
+                        message=(
+                            f"ad-hoc counter increment on {chain} outside "
+                            f"repro.obs — use obs.registry.counter(...) "
+                            f"or mirror the legacy dict through a "
+                            f"register_metrics adapter (or "
+                            f"allow[{RULE_ID}] stating why)"),
+                    ))
+    return out

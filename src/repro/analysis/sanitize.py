@@ -115,7 +115,7 @@ def transfer_sanitizer(max_fetches: int = 1):
         return orig_item(self, *a, **k)
 
     def sanctioned_fetch(tree):
-        stats.fetches += 1
+        stats.fetches += 1  # allow[metric-discipline]: the sanitizer IS the counted-fetch meter — it enforces the contract and must work with repro.obs disabled
         if stats.fetches > stats.max_fetches:
             raise FetchBudgetExceeded(
                 f"sanctioned fetch #{stats.fetches} exceeds the budget of "

@@ -536,6 +536,9 @@ class ShardedDesign:
             n_loc=n_loc,
             cap_tile=cap_tile,
         )
+        # mirror the manager's counters onto an active metrics registry
+        # (lazy callback; residency_stats() stays the source of truth)
+        st.residency.register_metrics(name=f"residency.tile{st.cap_tile}")
         self._states[tile] = st
         return st
 

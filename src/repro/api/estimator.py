@@ -64,6 +64,7 @@ from repro.api.types import (  # noqa: F401  (re-export: path output)
 from repro.core.screening import _nll_residual
 from repro.data.byfeature import k_class, scatter_features
 from repro.data.residency import put_slab
+from repro.obs import trace as obs_trace
 from repro.resilience import PathProgress, maybe_kill
 from repro.sharding.collect import replicate
 
@@ -111,6 +112,12 @@ def _screened_point(p_cap, lam, lam_prev, beta, m, *, grad_abs,
     (the penultimate round lifts the budget so certification can always
     complete within ``max_kkt_rounds``). Returns the certified mask
     alongside the result for the driver to carry.
+
+    Trace spans (``repro.obs``) bracket the phases at the host syncs the
+    loop already performs — the working-set count fetch (screen_round),
+    the restricted solve's own fetch (restricted_solve), the violation
+    count fetch (kkt_check). Async dispatch between syncs is attributed
+    to the span owning the next sync; no new fetch is ever added.
     """
     g_abs = grad_abs(m)
     mask = strong_rule_mask(g_abs, lam, lam_prev, beta)
@@ -122,14 +129,18 @@ def _screened_point(p_cap, lam, lam_prev, beta, m, *, grad_abs,
     cap = 0
     deferred = 0
     for rounds in range(1, max_kkt_rounds + 1):
-        count = int(engine.device_get(mask.sum()))
+        with obs_trace.span("screen_round", round=rounds) as sr:
+            count = int(engine.device_get(mask.sum()))
+            sr.set(active=count)
         if count == 0:
             # empty working set: beta stays 0 (strong rule + no support)
             beta_new, m_new = beta, m
             res = empty_result(beta)
         else:
             cap = capacity_bucket(count, p_cap, tile=cap_tile)
-            res, beta_new, m_new = restricted_solve(mask, cap, beta)
+            with obs_trace.span("restricted_solve", active=count,
+                                capacity=cap):
+                res, beta_new, m_new = restricted_solve(mask, cap, beta)
             if getattr(res, "status", 0):
                 # Guardrail trip inside the restricted solve: certification
                 # cannot proceed on a degraded iterate. Bail out with the
@@ -139,9 +150,11 @@ def _screened_point(p_cap, lam, lam_prev, beta, m, *, grad_abs,
                         "kkt_rounds": rounds, "deferred": deferred,
                         "status": int(res.status)}
                 return res, beta, m, info, mask
-        g_abs = grad_abs(m_new)
-        viol = kkt_violations(g_abs, lam, mask, tol=kkt_tol)
-        n_viol = int(engine.device_get(viol.sum()))
+        with obs_trace.span("kkt_check", round=rounds) as kk:
+            g_abs = grad_abs(m_new)
+            viol = kkt_violations(g_abs, lam, mask, tol=kkt_tol)
+            n_viol = int(engine.device_get(viol.sum()))
+            kk.set(violations=n_viol)
         if n_viol == 0:
             break
         if violation_budget is not None and rounds < max_kkt_rounds - 1:
@@ -559,7 +572,48 @@ class LogisticL1:
         is resumed bit-identically from the last certified point;
         ``checkpoint_every=k`` (requires ``resume_from``) checkpoints
         every k-th point into it with atomic publish + CRC integrity.
+
+        Observability: under an active ``repro.obs`` tracer the solve
+        emits the ``path > lambda_grid / lambda_point > {screen_round,
+        restricted_solve, kkt_check, point_finish}`` span tree, with
+        per-point nnz/f/status attached to each ``lambda_point``. Spans
+        close at host syncs the driver already performs — tracing adds
+        no device->host transfer and no compile, and with no tracer
+        active every span call is a no-op (certified by
+        ``tests/test_sanitizers.py``).
         """
+        with obs_trace.span("path", path_len=path_len,
+                            screen=screen) as sp:
+            result = self._path_impl(
+                data, y, path_len=path_len, eval_fn=eval_fn,
+                extra_lams=extra_lams, verbose=verbose, screen=screen,
+                kkt_tol=kkt_tol, max_kkt_rounds=max_kkt_rounds,
+                carry_working_set=carry_working_set,
+                violation_budget=violation_budget, densify=densify,
+                checkpoint_every=checkpoint_every,
+                resume_from=resume_from,
+            )
+            sp.set(points=len(result))
+            return result
+
+    def _path_impl(
+        self,
+        data,
+        y,
+        *,
+        path_len: int,
+        eval_fn: Optional[Callable[[jnp.ndarray], dict]],
+        extra_lams: Optional[List[float]],
+        verbose: bool,
+        screen: bool,
+        kkt_tol: float,
+        max_kkt_rounds: int,
+        carry_working_set: bool,
+        violation_budget: Optional[int],
+        densify: Optional[bool],
+        checkpoint_every: Optional[int],
+        resume_from: Optional[str],
+    ) -> PathResult:
         design = self._design(data, y)
         strat = resolve(design, self.opts, densify=densify)
         opts = strat.opts
@@ -629,14 +683,16 @@ class LogisticL1:
                     return res, beta_full, m_full
                 return restricted_solve
 
-        if slab_mesh:
-            # at beta = 0 the NLL gradient is -0.5 * X^T y, so the sparse
-            # screen pass at zero margins *is* lambda_max — same program
-            # every later screen reuses, no dense X needed
-            lmax = float(engine.device_get(jnp.max(grad_abs(m))))
-        else:
-            lmax = float(engine.device_get(lambda_max_design(design, y)))
-        lams = _lambda_grid(lmax, path_len, extra_lams)
+        with obs_trace.span("lambda_grid"):
+            if slab_mesh:
+                # at beta = 0 the NLL gradient is -0.5 * X^T y, so the
+                # sparse screen pass at zero margins *is* lambda_max —
+                # same program every later screen reuses, no dense X needed
+                lmax = float(engine.device_get(jnp.max(grad_abs(m))))
+            else:
+                lmax = float(engine.device_get(
+                    lambda_max_design(design, y)))
+            lams = _lambda_grid(lmax, path_len, extra_lams)
         beta = jnp.zeros(p_cap, jnp.float32)
 
         def empty_result(beta_cur):
@@ -706,75 +762,88 @@ class LogisticL1:
 
         for pt_idx in range(start, len(lams)):
             lam = lams[pt_idx]
-            if screen:
-                res, beta_new, m_new, info, mask = solve_point(
-                    lam, carry_mask, strat)
-                pt_status = int(getattr(res, "status", 0))
-                # Per-lambda degradation ladder: a tripped solve never
-                # feeds the warm-start chain. (1) drop the carried working
-                # set and re-warm-start from the previous certified point;
-                # (2) blocked cycles fall back to the sequential chain;
-                # (3) skip-and-mark, keeping the last certified state.
-                if pt_status:
+            with obs_trace.span("lambda_point", index=pt_idx,
+                                lam=float(lam)) as pt_sp:
+                if screen:
                     res, beta_new, m_new, info, mask = solve_point(
-                        lam, None, strat)
+                        lam, carry_mask, strat)
                     pt_status = int(getattr(res, "status", 0))
-                    info["degraded"] = "rewarm"
-                if pt_status and opts.cycle_mode == "blocked":
-                    seq_strat = resolve(
-                        design, _dc_replace(opts, cycle_mode="sequential"),
-                        densify=densify)
-                    res, beta_new, m_new, info, mask = solve_point(
-                        lam, None, seq_strat)
-                    pt_status = int(getattr(res, "status", 0))
-                    info["degraded"] = "sequential"
-                if pt_status:
-                    # skipped: beta/m stay at the previous certified point
-                    beta_new, m_new, mask = beta, m, carry_mask
-                    info = {**info, "skipped": True, "degraded": "skipped"}
-                beta, m = beta_new, m_new
-                if carry_working_set and not pt_status:
-                    carry_mask = mask
-            else:
-                res = _solve(design, y, lam, strat, beta0=beta)
-                pt_status = int(getattr(res, "status", 0))
-                if pt_status:
-                    # unscreened oracle loop: mark the point, hold the
-                    # warm-start chain at the last certified state
-                    info = {"skipped": True, "degraded": "skipped"}
+                    # Per-lambda degradation ladder: a tripped solve never
+                    # feeds the warm-start chain. (1) drop the carried
+                    # working set and re-warm-start from the previous
+                    # certified point; (2) blocked cycles fall back to the
+                    # sequential chain; (3) skip-and-mark, keeping the last
+                    # certified state.
+                    if pt_status:
+                        res, beta_new, m_new, info, mask = solve_point(
+                            lam, None, strat)
+                        pt_status = int(getattr(res, "status", 0))
+                        info["degraded"] = "rewarm"
+                    if pt_status and opts.cycle_mode == "blocked":
+                        seq_strat = resolve(
+                            design,
+                            _dc_replace(opts, cycle_mode="sequential"),
+                            densify=densify)
+                        res, beta_new, m_new, info, mask = solve_point(
+                            lam, None, seq_strat)
+                        pt_status = int(getattr(res, "status", 0))
+                        info["degraded"] = "sequential"
+                    if pt_status:
+                        # skipped: beta/m stay at the previous certified
+                        # point
+                        beta_new, m_new, mask = beta, m, carry_mask
+                        info = {**info, "skipped": True,
+                                "degraded": "skipped"}
+                    beta, m = beta_new, m_new
+                    if carry_working_set and not pt_status:
+                        carry_mask = mask
                 else:
-                    beta = res.beta
-                    m = res.m if getattr(res, "m", None) is not None \
-                        else design.margins(beta)
-                    info = {}
-            lam_prev = lam
-            beta_out = to_output(beta) if to_output is not None else beta
-            # one audited fetch for the per-point telemetry (engine's
-            # device_get door — countable under the transfer sanitizer)
-            f_dev = (res.f if res.n_iters and not pt_status
-                     else objective(m, y, beta, lam))
-            nnz_h, f_h = engine.device_get(
-                (jnp.sum(jnp.abs(beta_out) > 0), f_dev))
-            nnz, f = int(nnz_h), float(f_h)
-            metrics = eval_fn(beta_out) if eval_fn else {}
-            points.append(
-                PathPoint(lam=lam, nnz=nnz, f=f,
-                          n_iters=0 if pt_status else res.n_iters,
-                          beta=beta_out, metrics=metrics, screen=info,
-                          status=pt_status)
-            )
-            if verbose:
-                print(
-                    f"lambda={lam:10.4f} nnz={nnz:6d} f={points[-1].f:12.4f} "
-                    f"iters={points[-1].n_iters:3d} {info} {metrics}"
-                )
-            if progress is not None and checkpoint_every is not None \
-                    and (pt_idx + 1 - start) % checkpoint_every == 0:
-                _save_progress(progress, pt_idx, lams, lam_prev, beta, m,
-                               carry_mask, points, p, int(p_cap))
-            # fault-injection hook: simulated process death between points
-            # (after the checkpoint lands, like a real mid-path kill)
-            maybe_kill(pt_idx + 1)
+                    res = _solve(design, y, lam, strat, beta0=beta)
+                    pt_status = int(getattr(res, "status", 0))
+                    if pt_status:
+                        # unscreened oracle loop: mark the point, hold the
+                        # warm-start chain at the last certified state
+                        info = {"skipped": True, "degraded": "skipped"}
+                    else:
+                        beta = res.beta
+                        m = res.m if getattr(res, "m", None) is not None \
+                            else design.margins(beta)
+                        info = {}
+                lam_prev = lam
+                with obs_trace.span("point_finish"):
+                    beta_out = to_output(beta) if to_output is not None \
+                        else beta
+                    # one audited fetch for the per-point telemetry
+                    # (engine's device_get door — countable under the
+                    # transfer sanitizer)
+                    f_dev = (res.f if res.n_iters and not pt_status
+                             else objective(m, y, beta, lam))
+                    nnz_h, f_h = engine.device_get(
+                        (jnp.sum(jnp.abs(beta_out) > 0), f_dev))
+                    nnz, f = int(nnz_h), float(f_h)
+                    metrics = eval_fn(beta_out) if eval_fn else {}
+                    points.append(
+                        PathPoint(lam=lam, nnz=nnz, f=f,
+                                  n_iters=0 if pt_status else res.n_iters,
+                                  beta=beta_out, metrics=metrics,
+                                  screen=info, status=pt_status)
+                    )
+                    if verbose:
+                        print(
+                            f"lambda={lam:10.4f} nnz={nnz:6d} "
+                            f"f={points[-1].f:12.4f} "
+                            f"iters={points[-1].n_iters:3d} {info} {metrics}"
+                        )
+                    if progress is not None and checkpoint_every is not None \
+                            and (pt_idx + 1 - start) % checkpoint_every == 0:
+                        _save_progress(progress, pt_idx, lams, lam_prev,
+                                       beta, m, carry_mask, points, p,
+                                       int(p_cap))
+                pt_sp.set(nnz=nnz, f=f, status=pt_status)
+                # fault-injection hook: simulated process death between
+                # points (after the checkpoint lands, like a real mid-path
+                # kill)
+                maybe_kill(pt_idx + 1)
         self.beta_ = points[-1].beta if points else None
         self.lam_ = lams[-1] if lams else None
         return PathResult.from_points(points)

@@ -47,6 +47,8 @@ from typing import Iterator, Optional, Tuple
 
 import jax
 
+from repro.obs import registry as obs_registry
+from repro.obs import trace as obs_trace
 from repro.resilience.inject import InjectedFault, take_prefetch_failure
 from repro.resilience.retry import retry_call
 
@@ -182,8 +184,12 @@ class BucketResidencyManager:
             self.counters.hits += 1
             return pair
         self.counters.misses += 1
-        self._ensure_room(self.bucket_bytes[i], keep={i})
-        pair = self._put(i, *self._host[i])
+        # the span brackets eviction + the (async-dispatch) re-put — on
+        # the CPU fake-device mesh that is bookkeeping + memcpy, on a
+        # real accelerator it is the h2d dispatch the double buffer hides
+        with obs_trace.span("bucket_stream", bucket=i):
+            self._ensure_room(self.bucket_bytes[i], keep={i})
+            pair = self._put(i, *self._host[i])
         self._admit(i, pair)
         return pair
 
@@ -209,6 +215,20 @@ class BucketResidencyManager:
         finally:
             self._pinned = set()
             self._iterating = False
+
+    # -- telemetry ---------------------------------------------------------
+
+    def register_metrics(self, registry=None, *,
+                         name: str = "residency") -> None:
+        """Mirror this manager's counters onto a ``repro.obs`` metrics
+        registry as a lazy read-only callback. The :class:`ResidencyCounters`
+        dataclass stays the single source of truth — ``stats()`` /
+        ``residency_stats()`` values are bit-identical whether or not a
+        registry is active. No-op when no registry is given or armed."""
+        reg = obs_registry.get_registry() if registry is None else registry
+        if reg is None:
+            return
+        reg.register_callback(name, self.stats)
 
     # -- introspection -----------------------------------------------------
 

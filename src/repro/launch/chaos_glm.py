@@ -28,6 +28,12 @@ geometry:
   bit-identical to the resident solve); a fatal failure window placed
   mid-path kills the streamed solve after a checkpoint, and resuming via
   ``PathProgress`` reproduces the path bit-for-bit.
+
+``--trace PATH`` runs the scenarios under ``repro.obs.observe()`` and, on
+top of the legacy assertions above, asserts each scenario's injected
+faults showed up in the ``faults.*`` / ``retry.*`` registry counters —
+then exports ``PATH.trace.json`` / ``PATH.summary.json`` and checks the
+counters survived into the dump.
 """
 from __future__ import annotations
 
@@ -67,6 +73,7 @@ import numpy as np
 
 from repro.api import LogisticL1, PathResult
 from repro.checkpoint import CheckpointCorruption, verify_payload
+from repro.obs import observe
 from repro.configs.base import GLMConfig
 from repro.core import engine
 from repro.data.synthetic import make_glm_dataset
@@ -90,6 +97,17 @@ from repro.serve import (
 
 _SCENARIOS = ("nan-inject", "kill-resume", "corrupt", "overload",
               "lost-bucket")
+
+#: fault counters (see repro.resilience / repro.obs) each scenario MUST
+#: bump when it runs under --trace; asserted against the live registry
+#: and again against the exported summary dump
+_EXPECT = {
+    "nan-inject": ("faults.engine",),
+    "kill-resume": ("faults.kill",),
+    "corrupt": ("retry.retries",),
+    "overload": ("faults.swap", "faults.serve_delay"),
+    "lost-bucket": ("faults.prefetch", "retry.retries"),
+}
 
 
 def _dataset(args, mesh):
@@ -356,6 +374,11 @@ def main():
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--p", type=int, default=128)
     ap.add_argument("--path-len", type=int, default=4)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="run under repro.obs, assert each scenario's "
+                         "expected faults.*/retry.* counters fired, and "
+                         "write PATH.trace.json / PATH.events.jsonl / "
+                         "PATH.summary.json")
     args = ap.parse_args()
     if args.smoke:
         args.n, args.p, args.path_len = min(args.n, 128), min(args.p, 64), \
@@ -368,8 +391,33 @@ def main():
         mesh = parse_mesh(args.mesh)
 
     todo = _SCENARIOS if args.scenario == "all" else (args.scenario,)
-    for name in todo:
-        globals()["scenario_" + name.replace("-", "_")](args, mesh)
+    if args.trace is None:
+        for name in todo:
+            globals()["scenario_" + name.replace("-", "_")](args, mesh)
+    else:
+        with observe() as obs:
+            for name in todo:
+                globals()["scenario_" + name.replace("-", "_")](args, mesh)
+                for cname in _EXPECT[name]:
+                    got = obs.registry.value(cname)
+                    if not got:
+                        raise SystemExit(
+                            f"FAIL: scenario {name} ran under --trace but "
+                            f"counter {cname} never fired (value={got})")
+                print(f"# trace: {name} fault counters fired: " + ", ".join(
+                    f"{c}={obs.registry.value(c)}" for c in _EXPECT[name]))
+        summary = obs.summary()
+        dumped = summary.get("counters", {})
+        for name in todo:
+            for cname in _EXPECT[name]:
+                if not dumped.get(cname):
+                    raise SystemExit(
+                        f"FAIL: counter {cname} fired live but is missing "
+                        f"from the summary dump")
+        files = obs.export(args.trace)
+        print(f"# trace: {files['trace']} (open in Perfetto) | "
+              f"summary: {files['summary']} "
+              f"(python -m repro.obs.report {files['summary']})")
     if args.smoke:
         print("CHAOS SMOKE OK")
 

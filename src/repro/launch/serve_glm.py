@@ -13,6 +13,12 @@ one jitted slab dispatch per batch, every request row picking its own
 lambda — and reports scores/sec. ``--smoke`` additionally self-checks
 served scores bit-equal to ``LogisticL1.decision_function`` at every
 operating point and exercises a hot-swap mid-traffic.
+
+``--trace PATH`` runs the whole launcher under ``repro.obs.observe()``
+and writes ``PATH.trace.json`` (Perfetto-loadable), ``PATH.events.jsonl``
+and ``PATH.summary.json`` — the summary carries the submit->score
+latency histogram (p50/p95/p99) and the serve/drain/score/swap span
+totals; render it with ``python -m repro.obs.report PATH.summary.json``.
 """
 from __future__ import annotations
 
@@ -53,6 +59,7 @@ import numpy as np
 from repro.api import LogisticL1, PathResult, SlabDesign, ShardedDesign
 from repro.configs.base import GLMConfig
 from repro.data.synthetic import make_glm_dataset
+from repro.obs import observe, trace as obs_trace
 from repro.serve import PathScorer, PathStore, RequestBatcher, hash_token
 
 
@@ -70,18 +77,27 @@ def make_traffic(rng, p: int, count: int, lambdas, *, tokens_per: int = 12):
 
 def serve_loop(scorer, batcher, reqs, lams, *, steps: int):
     """Drive ``steps`` drain->score rounds over the traffic; returns
-    (total scores, elapsed seconds, versions seen)."""
+    (total scores, elapsed seconds, versions seen).
+
+    Under an active ``repro.obs`` tracer the rounds run inside a
+    ``serve`` span (the encode/drain/score spans come from the serve
+    layer itself), and each scored drain feeds the submit->score
+    ``serve.latency_s`` histogram via :meth:`RequestBatcher.mark_scored`
+    — called right after ``scorer.score`` returns host numpy, the
+    loop's existing sync point."""
     total, versions = 0, set()
     per = max(1, len(reqs) // steps)
     t0 = time.perf_counter()
-    for s in range(steps):
-        for r, l in zip(reqs[s * per:(s + 1) * per],
-                        lams[s * per:(s + 1) * per]):
-            batcher.submit(r, l)
-        batch, blams = batcher.drain()
-        scores, ver = scorer.score(batch, blams)
-        total += len(scores)
-        versions.add(ver)
+    with obs_trace.span("serve", steps=steps):
+        for s in range(steps):
+            for r, l in zip(reqs[s * per:(s + 1) * per],
+                            lams[s * per:(s + 1) * per]):
+                batcher.submit(r, l)
+            batch, blams = batcher.drain()
+            scores, ver = scorer.score(batch, blams)
+            batcher.mark_scored()
+            total += len(scores)
+            versions.add(ver)
     # allow[bench-timing]: scorer.score returns host numpy — every batch is synced before the clock stops
     return total, time.perf_counter() - t0, versions
 
@@ -129,6 +145,11 @@ def main():
     ap.add_argument("--load-path", default=None,
                     help="serve a PathResult.save checkpoint instead of "
                          "fitting (no training data touched)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="run under repro.obs and write PATH.trace.json "
+                         "(Perfetto-loadable) / PATH.events.jsonl / "
+                         "PATH.summary.json with span totals and the "
+                         "submit->score latency histogram")
     args = ap.parse_args()
     if args.smoke:
         args.n, args.p, args.path_len = min(args.n, 256), min(args.p, 128), \
@@ -140,6 +161,25 @@ def main():
 
         mesh = parse_mesh(args.mesh)
 
+    if args.trace is None:
+        _run(args, mesh)
+        return
+    with observe() as obs:
+        _run(args, mesh)
+    summary = obs.summary()
+    hist = summary.get("histograms", {}).get("serve.latency_s")
+    if hist and hist["count"]:
+        print(f"# submit->score latency ({hist['count']} requests): "
+              f"p50 {hist['p50'] * 1e3:.2f}ms / "
+              f"p95 {hist['p95'] * 1e3:.2f}ms / "
+              f"p99 {hist['p99'] * 1e3:.2f}ms")
+    files = obs.export(args.trace)
+    print(f"# trace: {files['trace']} (open in Perfetto) | "
+          f"summary: {files['summary']} "
+          f"(python -m repro.obs.report {files['summary']})")
+
+
+def _run(args, mesh):
     est = LogisticL1(mesh=mesh) if mesh is not None else LogisticL1()
     if args.load_path:
         path = PathResult.load(args.load_path)

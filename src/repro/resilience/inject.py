@@ -35,7 +35,11 @@ depend on it being armed:
   ``repro.checkpoint`` directory (bit flip / truncation / meta drop).
 
 Everything here is stdlib-only: the harness must import (and the hooks
-answer None/no-op) even where JAX cannot.
+answer None/no-op) even where JAX cannot. Every fault that actually
+*fires* bumps a ``faults.*`` counter on the active ``repro.obs`` metrics
+registry (a no-op when none is armed), so chaos drills can assert the
+expected faults really happened through the same telemetry surface
+production reads.
 """
 from __future__ import annotations
 
@@ -46,6 +50,8 @@ import time
 from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Optional
+
+from repro.obs import registry as _metrics
 
 
 class InjectedFault(RuntimeError):
@@ -161,10 +167,12 @@ def arm_engine_fault() -> Optional[EngineFault]:
         if a is None or a.plan.engine is None:
             return None
         if a.engine_left is None:
+            _metrics.counter("faults.engine").inc()
             return a.plan.engine
         if a.engine_left <= 0:
             return None
         a.engine_left -= 1
+        _metrics.counter("faults.engine").inc()
         return a.plan.engine
 
 
@@ -174,6 +182,7 @@ def maybe_kill(points_done: int) -> None:
     a = _ACTIVE
     if (a is not None and a.plan.kill_after_points is not None
             and points_done >= a.plan.kill_after_points):
+        _metrics.counter("faults.kill").inc()
         raise InjectedKill(
             f"injected kill after {points_done} path points "
             f"(plan: kill_after_points={a.plan.kill_after_points})")
@@ -184,6 +193,7 @@ def serve_delay() -> float:
     a = _ACTIVE
     if a is None or a.plan.serve_latency_s <= 0.0:
         return 0.0
+    _metrics.counter("faults.serve_delay").inc()
     time.sleep(a.plan.serve_latency_s)
     return a.plan.serve_latency_s
 
@@ -195,6 +205,7 @@ def take_swap_failure() -> bool:
         if a is None or a.swaps_left <= 0:
             return False
         a.swaps_left -= 1
+        _metrics.counter("faults.swap").inc()
         return True
 
 
@@ -205,6 +216,7 @@ def take_load_failure() -> bool:
         if a is None or a.loads_left <= 0:
             return False
         a.loads_left -= 1
+        _metrics.counter("faults.load").inc()
         return True
 
 
@@ -225,6 +237,7 @@ def take_prefetch_failure() -> bool:
             a.prefetch_ok_left -= 1
             return False
         a.prefetches_left -= 1
+        _metrics.counter("faults.prefetch").inc()
         return True
 
 

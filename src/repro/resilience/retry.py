@@ -6,12 +6,18 @@ build-then-publish, a checkpoint directory mid-rotation). Wrapping them
 in :func:`retry_call` keeps the failure typed and bounded instead of
 letting one transient kill the serve loop.
 
-Stdlib only; the sleep is injectable so tests run at full speed.
+Stdlib only (the ``repro.obs`` registry it reports retries to is itself
+stdlib-only); the sleep is injectable so tests run at full speed. When a
+metrics registry is active, each retried failure bumps the process-wide
+``retry.retries`` counter and each give-up bumps ``retry.exhausted`` —
+``on_retry`` remains the per-call-site hook for legacy counters.
 """
 from __future__ import annotations
 
 import time
 from typing import Callable, Optional, Tuple, Type, TypeVar
+
+from repro.obs import registry as _metrics
 
 T = TypeVar("T")
 
@@ -60,6 +66,8 @@ def retry_call(
                 break
             if on_retry is not None:
                 on_retry(k, err)
+            _metrics.counter("retry.retries").inc()
             do_sleep(min(base_delay_s * (2.0 ** k), max_delay_s))
     assert last is not None
+    _metrics.counter("retry.exhausted").inc()
     raise RetriesExhausted(attempts, last) from last

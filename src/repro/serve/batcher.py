@@ -19,6 +19,14 @@ scored late. Rejections and sheds are counted in :attr:`RequestBatcher.
 stats` so the serve loop can export backpressure telemetry instead of
 dying by memory or serving answers nobody is waiting for.
 
+Observability rides the same path without changing it: every request
+records its submit timestamp, and the serve loop's :meth:`RequestBatcher.
+mark_scored` call (right after the scorer hands back host scores) feeds
+a submit->score ``serve.latency_s`` histogram on the active ``repro.obs``
+registry, with the live queue depth exported as a gauge. The legacy
+:attr:`RequestBatcher.stats` dict is bit-identical with or without a
+registry — it is mirrored read-only, never rewritten.
+
 Lambdas stay raw floats until scoring: ``PathScorer`` resolves them
 against the snapshot it scores with, so a hot-swap that re-grids the path
 re-resolves naturally instead of serving stale indices.
@@ -31,6 +39,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import registry as obs_registry
+from repro.obs import trace as obs_trace
 from repro.serve.ingest import InvalidRequest, PackedBatch, Request, \
     encode_request, pack_requests
 
@@ -106,13 +116,20 @@ class RequestBatcher:
         self.default_ttl_s = default_ttl_s
         self.clock = clock
         self._lock = threading.Lock()
-        # (encoded, lam, expiry-on-self.clock-or-None) per pending request
+        # (encoded, lam, expiry-on-self.clock-or-None, submit-ts) per
+        # pending request; the submit timestamp feeds the submit->score
+        # latency histogram and is never part of the legacy stats surface
         self._pending: List[
-            Tuple[Tuple[np.ndarray, np.ndarray], float, Optional[float]]
+            Tuple[Tuple[np.ndarray, np.ndarray], float, Optional[float],
+                  float]
         ] = []
         self._stats = {"submitted": 0, "rejected_overload": 0,
                        "rejected_invalid": 0, "shed_expired": 0,
                        "drained": 0}
+        # submit timestamps of the most recent drain, waiting for the
+        # serve loop to confirm the batch was scored (mark_scored)
+        self._last_drained_ts: List[float] = []
+        self.register_metrics()
 
     def submit(self, request: Request, lam: float, *,
                deadline_s: Optional[float] = None) -> None:
@@ -125,7 +142,8 @@ class RequestBatcher:
         queue is at ``max_pending`` — both counted before raising.
         """
         try:
-            enc = encode_request(request, self.p)
+            with obs_trace.span("encode"):
+                enc = encode_request(request, self.p)
             idx = enc[0]
             if idx.size and (int(idx.min()) < 0 or int(idx.max()) >= self.p):
                 raise InvalidRequest(
@@ -135,8 +153,9 @@ class RequestBatcher:
             with self._lock:
                 self._stats["rejected_invalid"] += 1
             raise
+        now = self.clock()
         ttl = self.default_ttl_s if deadline_s is None else deadline_s
-        expiry = None if ttl is None else self.clock() + float(ttl)
+        expiry = None if ttl is None else now + float(ttl)
         with self._lock:
             if len(self._pending) >= self.max_pending:
                 self._stats["rejected_overload"] += 1
@@ -144,8 +163,10 @@ class RequestBatcher:
                     f"pending queue full ({self.max_pending} requests): "
                     f"drain is not keeping up — shed and retry with backoff"
                 )
-            self._pending.append((enc, float(lam), expiry))
+            self._pending.append((enc, float(lam), expiry, now))
             self._stats["submitted"] += 1
+            depth = len(self._pending)
+        obs_registry.gauge("serve.queue_depth").set(depth)
 
     def __len__(self) -> int:
         with self._lock:
@@ -167,18 +188,56 @@ class RequestBatcher:
         ``lams[i]`` belongs to batch row ``i``. An empty queue drains to
         an all-padding batch (``n_live == 0``).
         """
-        now = self.clock()
-        with self._lock:
-            live = [e for e in self._pending
-                    if e[2] is None or e[2] > now]
-            self._stats["shed_expired"] += len(self._pending) - len(live)
-            take, self._pending = (live[:self.max_batch],
-                                   live[self.max_batch:])
-            self._stats["drained"] += len(take)
-        encoded = [enc for enc, _, _ in take]
-        lams = np.asarray([lam for _, lam, _ in take], np.float64)
-        cap = batch_capacity(max(len(encoded), 1), b_max=self.max_batch)
-        cap += (-cap) % max(self.dp, 1)
-        batch = pack_requests(encoded, self.p, batch_cap=cap, dp=self.dp,
-                              pad_p_to=self.pad_p_to, k_min=self.k_min)
+        with obs_trace.span("drain") as sp:
+            now = self.clock()
+            with self._lock:
+                live = [e for e in self._pending
+                        if e[2] is None or e[2] > now]
+                self._stats["shed_expired"] += len(self._pending) - len(live)
+                take, self._pending = (live[:self.max_batch],
+                                       live[self.max_batch:])
+                self._stats["drained"] += len(take)
+                self._last_drained_ts = [e[3] for e in take]
+                depth = len(self._pending)
+            obs_registry.gauge("serve.queue_depth").set(depth)
+            encoded = [e[0] for e in take]
+            lams = np.asarray([e[1] for e in take], np.float64)
+            cap = batch_capacity(max(len(encoded), 1), b_max=self.max_batch)
+            cap += (-cap) % max(self.dp, 1)
+            batch = pack_requests(encoded, self.p, batch_cap=cap, dp=self.dp,
+                                  pad_p_to=self.pad_p_to, k_min=self.k_min)
+            sp.set(drained=len(take))
         return batch, lams
+
+    def mark_scored(self) -> int:
+        """Record submit->score latency for the most recently drained
+        batch into the ``serve.latency_s`` histogram on the active
+        metrics registry. The serve loop calls this right after the
+        scorer returns host scores (the existing host sync) — the
+        observation costs one clock read per request and is a no-op
+        (beyond that) when no registry is active. Returns how many
+        requests were marked; calling twice without a new drain is a
+        harmless zero."""
+        with self._lock:
+            ts, self._last_drained_ts = self._last_drained_ts, []
+        if not ts:
+            return 0
+        hist = obs_registry.histogram("serve.latency_s")
+        now = self.clock()
+        for t in ts:
+            hist.observe(now - t)
+        return len(ts)
+
+    def register_metrics(self, registry=None) -> None:
+        """Mirror the legacy :attr:`stats` dict and the live queue depth
+        onto a ``repro.obs`` metrics registry as lazy read-only
+        callbacks. ``_stats`` stays the single source of truth — its
+        values are bit-identical whether or not a registry is active.
+        Called automatically at construction (no-op when no registry is
+        armed); call again to attach to a later-activated registry."""
+        reg = obs_registry.get_registry() if registry is None else registry
+        if reg is None:
+            return
+        reg.register_callback("serve.batcher", lambda: self.stats)
+        reg.register_callback("serve.queue",
+                              lambda: {"depth": len(self)})

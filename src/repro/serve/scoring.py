@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.obs import trace as obs_trace
 from repro.resilience import serve_delay
 from repro.serve.ingest import PackedBatch
 from repro.serve.store import PathStore, StoreSnapshot
@@ -130,7 +131,17 @@ class PathScorer:
         the store pins back to its last-good snapshot and the batch is
         rescored against that — and only if no snapshot survives does
         :class:`NonFiniteScores` escape. Requests never see poison.
+
+        The ``score`` span closes at the existing ``np.asarray`` host
+        sync on the scores — tracing adds no extra device->host hop.
         """
+        with obs_trace.span("score", rows=int(batch.n_live)) as sp:
+            scores, version = self._score(batch, lams)
+            sp.set(version=version)
+            return scores, version
+
+    def _score(self, batch: PackedBatch,
+               lams) -> Tuple[np.ndarray, int]:
         lams = np.asarray(lams, np.float64).reshape(-1)
         if lams.shape[0] != batch.n_live:
             raise ValueError(

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.types import PathResult
+from repro.obs import registry as obs_registry
+from repro.obs import trace as obs_trace
 from repro.resilience import InjectedFault, retry_call, take_load_failure, \
     take_swap_failure
 
@@ -144,27 +146,33 @@ class PathStore:
                           attempts=attempts, base_delay_s=0.01)
 
     def _publish(self, result: PathResult, p: int) -> StoreSnapshot:
-        """One build-then-flip attempt (the retryable unit of :meth:`swap`)."""
-        if take_swap_failure():
-            raise InjectedFault("injected PathStore.swap failure")
-        betas = jnp.asarray(result.betas, jnp.float32)
-        pad = (-p) % self.pad_p_to
-        if pad:
-            betas = jnp.pad(betas, ((0, 0), (0, pad)))
-        if self.mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec as P
+        """One build-then-flip attempt (the retryable unit of :meth:`swap`).
 
-            betas = jax.device_put(
-                betas, NamedSharding(self.mesh, P(None, "model")))
-        else:
-            betas = jax.device_put(betas)
-        betas.block_until_ready()     # fully materialized before publishing
-        self._version += 1
-        new = StoreSnapshot(version=self._version,
-                            lambdas=np.asarray(result.lambdas, np.float64),
-                            betas=betas, p=p)
-        self._prev = self._snap       # keep last-good for quarantine()
-        self._snap = new              # the atomic publish
+        The ``swap`` span closes at the existing ``block_until_ready``
+        sync + reference flip — tracing adds no new device round-trip."""
+        with obs_trace.span("swap", points=len(result)):
+            if take_swap_failure():
+                raise InjectedFault("injected PathStore.swap failure")
+            betas = jnp.asarray(result.betas, jnp.float32)
+            pad = (-p) % self.pad_p_to
+            if pad:
+                betas = jnp.pad(betas, ((0, 0), (0, pad)))
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                betas = jax.device_put(
+                    betas, NamedSharding(self.mesh, P(None, "model")))
+            else:
+                betas = jax.device_put(betas)
+            betas.block_until_ready()  # fully materialized before publishing
+            self._version += 1
+            new = StoreSnapshot(version=self._version,
+                                lambdas=np.asarray(result.lambdas,
+                                                   np.float64),
+                                betas=betas, p=p)
+            self._prev = self._snap   # keep last-good for quarantine()
+            self._snap = new          # the atomic publish
+        obs_registry.counter("serve.swaps").inc()
         return new
 
     # -- rollback -----------------------------------------------------------

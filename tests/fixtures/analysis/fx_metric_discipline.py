@@ -1,0 +1,32 @@
+"""Golden fixture: trips metric-discipline on both clock reads of the
+timing pair — but only when parsed under a synthetic ``src/repro/`` path
+(the rule is layer-scoped; see
+``test_metric_discipline_fixture_under_synthetic_src_path``). Where this
+file actually lives it must stay inert.
+
+The adapter class below must NOT trip: incrementing a legacy stats dict
+inside a class that defines ``register_metrics`` is the sanctioned
+mirror-don't-rewrite shape.
+"""
+import time
+
+
+def timed_step(fn):
+    # VIOLATION: raw wall clock outside repro.obs — this measurement is
+    # invisible to trace summaries and the report CLI
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+class LegacyAdapter:
+    """Legacy counter dict mirrored read-only onto the obs registry."""
+
+    def __init__(self):
+        self._stats = {"handled": 0}
+
+    def handle(self):
+        self._stats["handled"] += 1      # exempt: adapter class below
+
+    def register_metrics(self, registry=None):
+        pass

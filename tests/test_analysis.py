@@ -15,7 +15,8 @@ from repro.analysis import run_analysis
 from repro.analysis import runner
 from repro.analysis.context import ModuleInfo, Project
 from repro.analysis.findings import Suppressions
-from repro.analysis.rules import ALL_RULES, dead_code, nonfinite_guard
+from repro.analysis.rules import (ALL_RULES, dead_code, metric_discipline,
+                                  nonfinite_guard)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 FIXTURES = "tests/fixtures/analysis"
@@ -49,7 +50,8 @@ def test_rule_registry_covers_the_suite():
     assert len(ids) == len(set(ids))
     for required in ("sharded-concat", "psum-axis", "host-sync-in-jit",
                      "retrace-hazard", "bench-timing", "pallas-conventions",
-                     "dead-code", "nonfinite-guard", "bucket-residency"):
+                     "dead-code", "nonfinite-guard", "bucket-residency",
+                     "metric-discipline"):
         assert required in ids
 
 
@@ -77,6 +79,47 @@ def test_dead_code_fixture_under_synthetic_src_path():
     assert [f.rule for f in findings] == ["dead-code"]
     assert "repro.orphan_scaffold" in findings[0].message
     assert _scan(f"{FIXTURES}/fx_dead_code.py").ok
+
+
+def test_metric_discipline_fixture_under_synthetic_src_path():
+    # metric-discipline is layer-scoped to src/repro/ (outside repro/obs),
+    # so the fixture is re-parsed under a src/ path; where it actually
+    # lives it must stay inert
+    with open(os.path.join(REPO, FIXTURES, "fx_metric_discipline.py")) as fh:
+        source = fh.read()
+    mod = ModuleInfo.parse("src/repro/adhoc_timing.py", source)
+    findings = list(metric_discipline.check(
+        Project(root=REPO, modules=[mod])))
+    # both clock reads of the timing pair trip; the legacy-adapter
+    # increment (class defines register_metrics) must NOT
+    assert [f.rule for f in findings] == ["metric-discipline"] * 2
+    assert all("perf_counter" in f.message for f in findings)
+    assert _scan(f"{FIXTURES}/fx_metric_discipline.py").ok
+
+
+def test_metric_discipline_flags_counter_dicts_without_adapter():
+    src = ("class T:\n"
+           "    def __init__(self):\n"
+           "        self._stats = {'n': 0}\n"
+           "    def hit(self):\n"
+           "        self._stats['n'] += 1\n")
+    mod = ModuleInfo.parse("src/repro/serve/newmod.py", src)
+    findings = list(metric_discipline.check(
+        Project(root=REPO, modules=[mod])))
+    assert [f.rule for f in findings] == ["metric-discipline"]
+    assert "register_metrics" in findings[0].message
+    # the same class with a register_metrics adapter is the sanctioned
+    # legacy shape — inert
+    mod2 = ModuleInfo.parse(
+        "src/repro/serve/newmod.py",
+        src + "    def register_metrics(self, registry=None):\n"
+              "        pass\n")
+    assert list(metric_discipline.check(
+        Project(root=REPO, modules=[mod2]))) == []
+    # and repro/obs itself is the implementation — out of scope
+    mod3 = ModuleInfo.parse("src/repro/obs/newmod.py", src)
+    assert list(metric_discipline.check(
+        Project(root=REPO, modules=[mod3]))) == []
 
 
 def test_nonfinite_guard_scopes_to_serve_paths():

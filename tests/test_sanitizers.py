@@ -10,7 +10,11 @@ Three contracts get teeth here:
   audited door, so a whole ``LogisticL1.path`` runs under the sanitizer;
 * warm code never recompiles: ``compile_sanitizer(0)`` certifies the
   zero-retrace property of the warm-started path (>= 10 lambdas) and of
-  the serve scorer's repeat dispatch.
+  the serve scorer's repeat dispatch;
+* observability is free: running the same warm path under
+  ``repro.obs.observe()`` changes neither the counted-fetch total nor
+  the compile count — spans timestamp at existing sync points, they
+  never add a device->host transfer or an XLA compile.
 """
 import numpy as np
 import pytest
@@ -129,6 +133,38 @@ def test_compile_budget_trips_on_shape_change():
     with pytest.raises(CompileBudgetExceeded, match=r"jit\(g\)"):
         with compile_sanitizer(0):
             g(b)                      # new shape: retrace + recompile
+
+
+def test_traced_path_same_counted_fetches_as_untraced(problem, warm_path):
+    # the obs acceptance contract: tracing wraps EXISTING sync points, so
+    # the audited device->host crossing count is identical with and
+    # without an active tracer — and so are the coefficients
+    from repro.obs import observe
+
+    X, y = problem
+    est = LogisticL1(opts=DGLMNETOptions(**_OPTS))
+    with transfer_sanitizer(max_fetches=400) as ts_off:
+        path_off = est.path(DenseDesign(X), y, path_len=_PATH_LEN)
+    with observe() as obs:
+        with transfer_sanitizer(max_fetches=400) as ts_on:
+            path_on = est.path(DenseDesign(X), y, path_len=_PATH_LEN)
+    assert ts_on.fetches == ts_off.fetches
+    assert np.array_equal(np.asarray(path_on.betas),
+                          np.asarray(path_off.betas))
+    # and the trace actually recorded the path (it is not a null tracer)
+    assert any(r["name"] == "lambda_point" for r in obs.tracer.spans)
+
+
+def test_traced_path_adds_zero_compiles(problem, warm_path):
+    from repro.obs import observe
+
+    X, y = problem
+    est = LogisticL1(opts=DGLMNETOptions(**_OPTS))
+    with observe():
+        with compile_sanitizer(0) as cs:
+            path = est.path(DenseDesign(X), y, path_len=_PATH_LEN)
+    assert cs.count == 0, cs.compiles
+    assert np.allclose(np.asarray(path.betas), np.asarray(warm_path.betas))
 
 
 def test_serve_scorer_warm_dispatch_never_recompiles(warm_path):
